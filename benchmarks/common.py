@@ -1,0 +1,33 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    bipartite_pairs, build_paper_testbed, nic_ip, server_name, synthesize_flows,
+)
+
+
+def paper_setup(flows_per_pair: int = 16):
+    fab = build_paper_testbed()
+    rack0 = [server_name(i) for i in range(8)]
+    rack1 = [server_name(8 + i) for i in range(8)]
+    wl = bipartite_pairs(rack0, rack1, flows_per_pair=flows_per_pair)
+    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
+    return fab, wl, flows
+
+
+def timeit(fn, *, repeats: int = 3) -> float:
+    """Median wall seconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

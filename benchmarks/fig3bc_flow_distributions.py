@@ -1,0 +1,43 @@
+"""Paper Fig. 3(b,c): per-link flow distributions across the three link
+layers, ECMP vs preprogrammed static routing.  The red line in the paper
+is the ideal (4 flows/link); we report min/max/std per layer."""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import (
+    EcmpRouting, FlowTracer, analyze_paths, static_route_assignment,
+)
+from .common import emit, paper_setup
+
+LAYERS = ["leaf-to-spine", "spine-to-leaf", "leaf-to-host"]
+
+
+def _layer_stats(rep, layer):
+    counts = list(rep.per_layer[layer].values())
+    return (min(counts), max(counts), statistics.pstdev(counts),
+            rep.ideal_per_layer[layer])
+
+
+def run() -> None:
+    fab, wl, flows = paper_setup()
+    t0 = time.perf_counter()
+    res = FlowTracer(fab, EcmpRouting(fab, seed=7), wl, flows,
+                     num_threads=8).trace()
+    elapsed = time.perf_counter() - t0
+    rep_e = analyze_paths(res.paths, fab, layers=LAYERS)
+    _, static_paths = static_route_assignment(fab, flows)
+    rep_s = analyze_paths(static_paths, fab, layers=LAYERS)
+
+    for layer in LAYERS:
+        lo, hi, sd, ideal = _layer_stats(rep_e, layer)
+        emit(f"fig3b_ecmp_{layer}", elapsed * 1e6,
+             f"min={lo} max={hi} std={sd:.2f} ideal={ideal:.0f} "
+             f"fim={rep_e.per_layer_fim[layer]:.1f}%")
+    for layer in LAYERS:
+        lo, hi, sd, ideal = _layer_stats(rep_s, layer)
+        emit(f"fig3c_static_{layer}", 0.0,
+             f"min={lo} max={hi} std={sd:.2f} ideal={ideal:.0f} "
+             f"fim={rep_s.per_layer_fim[layer]:.1f}%")

@@ -1,0 +1,35 @@
+"""Paper Fig. 5: SSH connection strategies.
+
+Baseline           = 1 thread, ad-hoc connections (reconnect per query);
+Persistent         = 1 thread, one connection per device reused;
+Parallel+Persistent = persistent + threads (8 for >=8 flows, else #flows).
+"""
+
+from __future__ import annotations
+
+from repro.core import ADHOC, PERSISTENT, EcmpRouting, FlowTracer, LatencyModel, \
+    WorkloadDescription
+from .common import emit, paper_setup, timeit
+
+LAT = LatencyModel(connect_s=0.003, query_s=0.001)
+
+
+def run() -> None:
+    fab, wl_full, flows = paper_setup(flows_per_pair=16)
+    for n_flows in (16, 32, 64, 128):
+        wl = WorkloadDescription(pairs=wl_full.pairs[: max(1, n_flows // 16)])
+        cfgs = {
+            "baseline": dict(connection_mode=ADHOC, num_threads=1),
+            "persistent": dict(connection_mode=PERSISTENT, num_threads=1),
+            "par_persistent": dict(connection_mode=PERSISTENT,
+                                   num_threads=8 if n_flows >= 8 else n_flows),
+        }
+        times = {}
+        for name, kw in cfgs.items():
+            tracer = FlowTracer(fab, EcmpRouting(fab, seed=1), wl, flows,
+                                latency=LAT, **kw)
+            times[name] = timeit(lambda: tracer.trace(), repeats=3)
+            emit(f"fig5_{name}_{n_flows}flows", times[name] * 1e6,
+                 f"seconds={times[name]:.3f}")
+        assert times["par_persistent"] <= times["baseline"], \
+            "parallel+persistent must be fastest (paper Fig. 5)"

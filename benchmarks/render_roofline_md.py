@@ -1,0 +1,51 @@
+"""Render EXPERIMENTS.md §Roofline table from results/dryrun (+ deltas vs
+results/dryrun_baseline when present).
+
+    PYTHONPATH=src python -m benchmarks.render_roofline_md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _load(d):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def run() -> str:
+    opt = _load("results/dryrun/single")
+    base = _load("results/dryrun_baseline/single")
+    lines = [
+        "| arch | shape | compute | memory | collective | dom | useful | "
+        "resident GiB | coll vs baseline |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for (arch, shape), r in sorted(opt.items()):
+        t = r["roofline"]
+        b = base.get((arch, shape))
+        delta = ""
+        if b:
+            b_c = b["roofline"]["collective_s"]
+            if b_c > 0 and t["collective_s"] > 0:
+                delta = f"{b_c / t['collective_s']:.1f}x better" \
+                    if b_c > t["collective_s"] * 1.05 else \
+                    ("~same" if b_c > t["collective_s"] * 0.95 else
+                     f"{t['collective_s']/b_c:.1f}x worse")
+        lines.append(
+            f"| {arch} | {shape} | {t['compute_s']*1e3:.1f} ms | "
+            f"{t['memory_s']*1e3:.1f} ms | {t['collective_s']*1e3:.1f} ms | "
+            f"{t['dominant'].replace('_s','')} | {t['useful_flop_ratio']:.2f} | "
+            f"{r['memory']['resident_analytic']['total']/2**30:.1f} | {delta} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,39 @@
+"""Roofline table from the dry-run records (results/dryrun/single/*.json):
+per (arch x shape), the three terms, dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPs 'useful' ratio.  See EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run() -> None:
+    records = []
+    for path in sorted(glob.glob("results/dryrun/single/*.json")):
+        with open(path) as f:
+            records.append(json.load(f))
+    if not records:
+        emit("roofline_missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    for r in records:
+        t = r["roofline"]
+        emit(
+            f"roofline_{r['arch']}__{r['shape']}",
+            t["bound_s"] * 1e6,
+            f"dom={t['dominant'].replace('_s','')} "
+            f"compute={t['compute_s']*1e3:.1f}ms "
+            f"mem={t['memory_s']*1e3:.1f}ms "
+            f"coll={t['collective_s']*1e3:.1f}ms "
+            f"useful={t['useful_flop_ratio']:.2f} "
+            f"resident_gib={r['memory']['resident_analytic']['total']/2**30:.1f}",
+        )
+    doms = {}
+    for r in records:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    emit("roofline_dominant_histogram", 0.0,
+         " ".join(f"{k.replace('_s','')}={v}" for k, v in sorted(doms.items())))

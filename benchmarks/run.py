@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper figure + beyond-paper extras.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig3a ...  # subset
+"""
+
+import sys
+
+from . import (
+    bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
+    fig4_thread_scaling, fig5_connection_strategies, placement_ablation,
+    roofline, vxlan_entropy,
+)
+
+BENCHES = {
+    "fig3a": fig3a_routing_comparison.run,
+    "fig3bc": fig3bc_flow_distributions.run,
+    "fig4": fig4_thread_scaling.run,
+    "fig5": fig5_connection_strategies.run,
+    "bulk_scale": bulk_scale.run,
+    "placement": placement_ablation.run,
+    "vxlan": vxlan_entropy.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name]()
+
+
+if __name__ == "__main__":
+    main()

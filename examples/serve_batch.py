@@ -1,0 +1,50 @@
+"""Batched serving example: prefill + token-by-token decode with a KV
+cache, greedy and sampled generation.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models import Model
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    cfg = ARCHS["granite-3-2b"].reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} (reduced, {n/1e6:.2f}M params)")
+
+    B, S0, steps = 4, 8, 24
+    engine = ServeEngine(model, batch_size=B, max_len=S0 + steps)
+    prompts = (jnp.arange(B * S0).reshape(B, S0) * 13 % cfg.vocab).astype(jnp.int32)
+
+    t0 = time.perf_counter()
+    out = engine.generate(params, prompts, steps=steps)
+    dt = time.perf_counter() - t0
+    print(f"greedy: generated {B}x{steps} tokens in {dt:.2f}s "
+          f"({B*steps/dt:.0f} tok/s incl. compile)")
+    print("sequences:")
+    for row in out.tolist():
+        print("  ", row)
+
+    t0 = time.perf_counter()
+    out2 = engine.generate(params, prompts, steps=steps)
+    dt = time.perf_counter() - t0
+    print(f"warm: {B*steps/dt:.0f} tok/s")
+    assert (out == out2).all(), "greedy generation must be deterministic"
+
+    out3 = engine.generate(params, prompts, steps=steps, temperature=0.8,
+                           key=jax.random.PRNGKey(1))
+    diff = int((out3[:, S0:] != out[:, S0:]).sum())
+    print(f"sampled (T=0.8): {diff}/{B*steps} tokens differ from greedy")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end training driver: ~100M-parameter granite-family model for a
+few hundred steps on CPU, with checkpointing, restart-on-failure, and
+straggler monitoring — the full production loop at laptop scale.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+
+Expected: loss falls from ~6.2 to < 3 on the structured synthetic stream
+(the stream is 8-fold repetitive, so sub-1 loss is learnable); a
+checkpoint lands every 50 steps; `--inject-failure` kills step 120 once
+and the loop resumes exactly from the last checkpoint.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import ARCHS
+from repro.data import SyntheticDataset
+from repro.ft import HostFailure, StragglerDetector, run_with_restarts
+from repro.models import Model
+from repro.train import AdamWConfig, TrainConfig, init_train_state, make_train_step
+
+
+def build_100m():
+    """granite-family, ~100M params, CPU-trainable."""
+    return dataclasses.replace(
+        ARCHS["granite-3-2b"],
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab=8192,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--inject-failure", action="store_true")
+    args = ap.parse_args()
+
+    cfg = build_100m()
+    model = Model(cfg)
+    tc = TrainConfig(optimizer=AdamWConfig(
+        lr=1e-3, warmup_steps=20, decay_steps=args.steps))
+    ds = SyntheticDataset(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch, seed=0)
+    step_fn = jax.jit(make_train_step(model, tc))
+    detector = StragglerDetector()
+    state: dict = {"failed": False}
+
+    def train_loop(_start: int) -> int:
+        if latest_step(args.ckpt_dir) is not None:
+            tpl = init_train_state(model, tc, jax.random.PRNGKey(0))
+            restored, s0 = restore(args.ckpt_dir,
+                                   {"params": tpl[0], "opt": tpl[1]})
+            params, opt = restored["params"], restored["opt"]
+            print(f"[restore] resumed from step {s0}")
+        else:
+            params, opt = init_train_state(model, tc, jax.random.PRNGKey(0))
+            s0 = 0
+            n = sum(x.size for x in jax.tree.leaves(params))
+            print(f"[init] {n/1e6:.1f}M params")
+        for i in range(s0, args.steps):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+            params, opt, metrics = step_fn(params, opt, batch)
+            metrics = jax.block_until_ready(metrics)  # sync for honest timing
+            dt = time.perf_counter() - t0
+            detector.record("host-0", dt)
+            if args.inject_failure and i == 120 and not state["failed"]:
+                state["failed"] = True
+                raise HostFailure("injected failure at step 120")
+            if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
+                save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
+            if (i + 1) % 20 == 0 or i == s0:
+                print(f"step {i+1:4d}  loss={float(metrics['loss']):.4f}  "
+                      f"gnorm={float(metrics['grad_norm']):.2f}  "
+                      f"lr={float(metrics['lr']):.2e}  {dt*1e3:.0f}ms")
+        return args.steps
+
+    run_with_restarts(train_loop, max_restarts=2)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

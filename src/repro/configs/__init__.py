@@ -1,0 +1,54 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+
+from __future__ import annotations
+
+from .base import (
+    ArchConfig, ShapeConfig, MoEConfig, MLAConfig, SSMConfig, HybridConfig,
+    EncDecConfig, SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    applicable_shapes,
+)
+from .granite_3_2b import CONFIG as GRANITE_3_2B
+from .glm4_9b import CONFIG as GLM4_9B
+from .codeqwen15_7b import CONFIG as CODEQWEN15_7B
+from .qwen2_72b import CONFIG as QWEN2_72B
+from .deepseek_v2_lite_16b import CONFIG as DEEPSEEK_V2_LITE_16B
+from .qwen2_moe_a27b import CONFIG as QWEN2_MOE_A27B
+from .jamba_15_large_398b import CONFIG as JAMBA_15_LARGE_398B
+from .whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
+from .qwen2_vl_72b import CONFIG as QWEN2_VL_72B
+from .mamba2_13b import CONFIG as MAMBA2_13B
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        GRANITE_3_2B, GLM4_9B, CODEQWEN15_7B, QWEN2_72B, DEEPSEEK_V2_LITE_16B,
+        QWEN2_MOE_A27B, JAMBA_15_LARGE_398B, WHISPER_LARGE_V3, QWEN2_VL_72B,
+        MAMBA2_13B,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells() -> list[tuple[ArchConfig, ShapeConfig]]:
+    """Every assigned (arch x shape) cell that compiles (32 cells; the 8
+    long_500k full-attention cells are documented skips, DESIGN.md §4)."""
+    return [(a, s) for a in ARCHS.values() for s in applicable_shapes(a)]
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+    "HybridConfig", "EncDecConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "applicable_shapes", "ARCHS", "get_arch",
+    "get_shape", "all_cells",
+]

@@ -1,0 +1,54 @@
+"""FlowTracer core: the paper's primary contribution.
+
+Fabric model + ECMP/static routing + Flow Imbalance Metric + the parallel
+hop-by-hop path-discovery algorithm + compiled-HLO flow extraction +
+topology-aware placement.  Deliberately jax-free (jax enters only through
+the text of compiled HLO) so tracer worker processes stay lightweight.
+"""
+
+from .fabric import (
+    Fabric, Link, Device, build_paper_testbed, build_multipod_fabric,
+    nic_ip, server_name,
+    HOST_TO_LEAF, LEAF_TO_SPINE, SPINE_TO_LEAF, LEAF_TO_HOST,
+)
+from .flows import (
+    Flow, FiveTuple, PairSpec, WorkloadDescription, synthesize_flows,
+    bipartite_pairs,
+)
+from .ecmp import (
+    EcmpRouting, StaticRouting, RoutingPolicy, Forwarder, ecmp_hash,
+    FIELDS_5TUPLE, FIELDS_VXLAN, FIELDS_IP_PAIR,
+)
+from .fim import fim, per_layer_fim, link_flow_counts, max_min_throughput, per_pair_throughput
+from .tracer import (
+    FlowTracer, TraceResult, LatencyModel, ConnectionManager, DeviceChannel,
+    ADHOC, PERSISTENT, auto_processes,
+)
+from .hlo_flows import (
+    CollectiveOp, extract_collectives, summarize, collectives_to_flows,
+    shape_bytes, CollectiveSummary, EdgeClassCounts,
+)
+from .placement import (
+    static_route_assignment, topology_aware_ring, ring_edge_stats,
+    balanced_port_spread,
+)
+from .report import analyze_paths, PathReport
+
+__all__ = [
+    "Fabric", "Link", "Device", "build_paper_testbed", "build_multipod_fabric",
+    "nic_ip", "server_name",
+    "HOST_TO_LEAF", "LEAF_TO_SPINE", "SPINE_TO_LEAF", "LEAF_TO_HOST",
+    "Flow", "FiveTuple", "PairSpec", "WorkloadDescription", "synthesize_flows",
+    "bipartite_pairs",
+    "EcmpRouting", "StaticRouting", "RoutingPolicy", "Forwarder", "ecmp_hash",
+    "FIELDS_5TUPLE", "FIELDS_VXLAN", "FIELDS_IP_PAIR",
+    "fim", "per_layer_fim", "link_flow_counts", "max_min_throughput",
+    "per_pair_throughput",
+    "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",
+    "DeviceChannel", "ADHOC", "PERSISTENT", "auto_processes",
+    "CollectiveOp", "extract_collectives", "summarize", "collectives_to_flows",
+    "shape_bytes", "CollectiveSummary", "EdgeClassCounts",
+    "static_route_assignment", "topology_aware_ring", "ring_edge_stats",
+    "balanced_port_spread",
+    "analyze_paths", "PathReport",
+]

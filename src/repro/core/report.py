@@ -1,0 +1,76 @@
+"""Path Analyzer (paper Steps 6-7): compile traced paths into the final,
+easy-to-consume output — per-layer link-load tables, FIM, collision list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from collections.abc import Mapping, Sequence
+
+from .fabric import Fabric, Link
+from .fim import fim, link_flow_counts, per_layer_fim
+from .flows import Flow
+
+Path = list[Link]
+
+
+@dataclasses.dataclass
+class PathReport:
+    total_flows: int
+    per_layer: dict[str, dict[str, int]]      # layer -> link name -> count
+    per_layer_fim: dict[str, float]           # layer -> FIM %
+    aggregate_fim: float
+    collisions: list[tuple[str, int]]         # links above ideal, worst first
+    ideal_per_layer: dict[str, float]
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, sort_keys=True)
+
+    def summary(self) -> str:
+        lines = [f"FlowTracer report: {self.total_flows} flows traced"]
+        for layer, lf in self.per_layer_fim.items():
+            ideal = self.ideal_per_layer[layer]
+            lines.append(f"  [{layer:14s}] FIM = {lf:6.2f}%  (ideal {ideal:.2f} flows/link)")
+        lines.append(f"  aggregate FIM = {self.aggregate_fim:.2f}%")
+        if self.collisions:
+            worst = ", ".join(f"{n}={c}" for n, c in self.collisions[:5])
+            lines.append(f"  worst links: {worst}")
+        return "\n".join(lines)
+
+
+def analyze_paths(
+    paths: Mapping[int, Path],
+    fabric: Fabric,
+    *,
+    layers: Sequence[str] | None = None,
+) -> PathReport:
+    counts = link_flow_counts(paths)
+    layer_fims = per_layer_fim(paths, fabric, layers=layers)
+    per_layer: dict[str, dict[str, int]] = defaultdict(dict)
+    ideal: dict[str, float] = {}
+    for layer, (f_val, n_links) in layer_fims.items():
+        links = fabric.links_by_layer(layer)
+        total = 0
+        for l in links:
+            c = counts.get(l.name, 0)
+            per_layer[layer][l.name] = c
+            total += c
+        ideal[layer] = total / len(links)
+
+    collisions = []
+    for layer, linkmap in per_layer.items():
+        for name, c in linkmap.items():
+            if c > ideal[layer]:
+                collisions.append((name, c))
+    collisions.sort(key=lambda x: -x[1])
+
+    return PathReport(
+        total_flows=len(paths),
+        per_layer={k: dict(v) for k, v in per_layer.items()},
+        per_layer_fim={k: v[0] for k, v in layer_fims.items()},
+        aggregate_fim=fim(paths, fabric, layers=layers),
+        collisions=collisions,
+        ideal_per_layer=ideal,
+    )

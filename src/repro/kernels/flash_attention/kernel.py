@@ -1,0 +1,113 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Canonical TPU pattern: grid (batch*heads, num_q_blocks, num_k_blocks) with
+("parallel", "parallel", "arbitrary") semantics; the k axis is the inner
+sequential loop.  Running (max, sumexp, acc) live in VMEM scratch across k
+steps; the output tile is written on the last k step.  Block shapes are
+MXU-aligned (block_q x head_dim and block_k x head_dim tiles, head_dim
+padded to >= 128 by the wrapper when needed).
+
+Causal masking skips fully-masked k blocks via pl.when on the block
+index, so the kernel does ~S^2/2 work like the XLA twin
+(models/attention.chunked_attention, which is also the test oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      causal: bool, block_q: int, block_k: int,
+                      num_k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _body():
+        q = q_ref[0]                                   # (block_q, hd)
+        k = k_ref[0]                                   # (block_k, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (block_q, block_k)
+        s *= 1.0 / math.sqrt(q.shape[-1])
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        scale = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * scale + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * scale + pv
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        pl.when(ki * block_k <= qi * block_q + block_q - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)) \
+            .astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, block_q: int = 128, block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (BH, S, hd) with matching S.  Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    assert k.shape == (BH, S, hd) and v.shape == (BH, S, hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, block_q=block_q, block_k=block_k,
+        num_k_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            # running max / sumexp (block_q, 1) and f32 accumulator in VMEM
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)

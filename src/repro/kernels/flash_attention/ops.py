@@ -1,0 +1,32 @@
+"""Jitted public wrapper for flash attention.
+
+On TPU this dispatches to the Pallas kernel; elsewhere (this CPU
+container) it falls back to the XLA reference so models remain runnable
+everywhere.  Tests call the kernel explicitly with interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "force_kernel", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, force_kernel: bool = False,
+                    interpret: bool = False):
+    """q, k, v: (BH, S, hd) -> (BH, S, hd)."""
+    if force_kernel or _on_tpu():
+        return flash_attention_fwd(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=interpret or not _on_tpu())
+    return attention_ref(q, k, v, causal=causal)

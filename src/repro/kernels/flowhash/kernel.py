@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for bulk ECMP hashing — the paper's hot loop made
+massively parallel.
+
+FlowTracer's fabric simulator must evaluate per-switch hash decisions for
+every flow; at datacenter scale (millions of flows x 4 hash decisions)
+the Python loop is the bottleneck the paper's Fig. 4 measures.  On TPU
+the whole flow table hashes in one VMEM-tiled elementwise pass: a
+murmur3-style 32-bit avalanche folded over the 5-tuple columns.  All ops
+are uint32 multiplies/xors/shifts — VPU-native, no MXU involvement.
+
+The hash differs from core/ecmp.py's host-side splitmix64 (64-bit int
+multiplies are not TPU-friendly); both are uniform avalanche hashes, and
+FIM statistics are hash-agnostic (benchmarks/fig3a shows both).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# numpy scalars inline as HLO literals (jnp scalars would be captured
+# consts, which pallas kernels reject)
+_C1 = np.uint32(0xCC9E2D51)
+_C2 = np.uint32(0x1B873593)
+_F1 = np.uint32(0x85EBCA6B)
+_F2 = np.uint32(0xC2B2AE35)
+
+
+def _rotl(x, r):
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def murmur_fold(h, k):
+    k = k * _C1
+    k = _rotl(k, 15)
+    k = k * _C2
+    h = h ^ k
+    h = _rotl(h, 13)
+    return h * np.uint32(5) + np.uint32(0xE6546B64)
+
+
+def murmur_fmix(h):
+    h = h ^ (h >> np.uint32(16))
+    h = h * _F1
+    h = h ^ (h >> np.uint32(13))
+    h = h * _F2
+    return h ^ (h >> np.uint32(16))
+
+
+def _hash_kernel(fields_ref, seed_ref, out_ref, *, n_fields: int):
+    seed = seed_ref[0, 0]
+    h = jnp.full(out_ref.shape, seed, jnp.uint32)
+    for f in range(n_fields):
+        h = murmur_fold(h, fields_ref[:, f : f + 1])
+    out_ref[...] = murmur_fmix(h)
+
+
+def bulk_hash_kernel(fields: jax.Array, seed: jax.Array, *,
+                     block: int = 4096, interpret: bool = False) -> jax.Array:
+    """fields: (N, F) uint32; seed: () uint32 -> (N, 1) uint32 hashes.
+    N must be a multiple of ``block`` (ops.py pads)."""
+    N, F = fields.shape
+    assert N % block == 0, (N, block)
+    kernel = functools.partial(_hash_kernel, n_fields=F)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block,),
+        in_specs=[
+            pl.BlockSpec((block, F), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.uint32),
+        interpret=interpret,
+    )(fields, seed.reshape(1, 1))

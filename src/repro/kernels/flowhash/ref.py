@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the bulk murmur3 hash kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import murmur_fmix, murmur_fold
+
+
+def bulk_hash_ref(fields, seed):
+    """fields: (N, F) uint32; seed: () uint32 -> (N, 1) uint32."""
+    N, F = fields.shape
+    h = jnp.full((N, 1), seed, jnp.uint32)
+    for f in range(F):
+        h = murmur_fold(h, fields[:, f : f + 1])
+    return murmur_fmix(h)

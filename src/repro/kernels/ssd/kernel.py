@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk computation.
+
+The SSD algorithm splits the sequence into chunks of Q tokens.  Within a
+chunk the recurrence collapses to a masked quadratic form — two MXU
+matmuls (C @ B^T and the weighted (Q,Q) @ (Q,hd)) plus cheap decay
+elementwise work — which is the compute hot spot.  This kernel computes,
+per (batch, head, chunk):
+
+    y_intra = ((C B^T) .* exp(cum_i - cum_j) .* dt_j) @ x        (Q, hd)
+    S_loc   = B^T @ (x .* dt .* exp(cum_last - cum))             (N, hd)
+    dec     = exp(cum_last)                                      (1, 1)
+
+The O(nc) inter-chunk state scan and the y_inter correction stay in XLA
+(ops.py) — they are tiny and sequential.  Decays use exponents masked
+BEFORE exp (no masked-inf gradients; mirrors models/ssm.ssd_chunked,
+which is the oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _ssd_chunk_kernel(a_ref, dt_ref, b_ref, c_ref, x_ref, y_ref, s_ref,
+                      dec_ref):
+    a = a_ref[0, 0, 0].astype(jnp.float32)       # (Q, 1) = dt * A  (negative)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # (Q, 1)
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    x = x_ref[0, 0, 0]                           # (Q, hd)
+    Q = a.shape[0]
+
+    cum = jnp.cumsum(a, axis=0)                  # (Q, 1)
+    dmat = cum - cum.reshape(1, Q)               # (Q, Q): cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(jnp.where(ii >= jj, dmat, NEG))  # masked BEFORE exp
+
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    w = scores * L * dt.reshape(1, Q)            # weight on x_j
+    y = jax.lax.dot_general(
+        w.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    cum_last = cum[Q - 1:Q, :]                   # (1, 1)
+    decay_to_end = jnp.exp(cum_last - cum)       # (Q, 1)
+    xw = x.astype(jnp.float32) * (dt * decay_to_end)
+    s_loc = jax.lax.dot_general(
+        Bm, xw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_ref[0, 0, 0] = s_loc                       # (N, hd) f32
+    dec_ref[0, 0, 0] = jnp.exp(cum_last)         # (1, 1)
+
+
+def ssd_intra_chunk(
+    a: jax.Array,    # (B, H, nc, Q, 1) f32, = dt * A  (negative)
+    dt: jax.Array,   # (B, H, nc, Q, 1) f32
+    Bm: jax.Array,   # (B, nc, Q, N)     shared across heads
+    Cm: jax.Array,   # (B, nc, Q, N)
+    x: jax.Array,    # (B, H, nc, Q, hd)
+    *, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y_intra (B,H,nc,Q,hd), S_loc (B,H,nc,N,hd) f32,
+    dec (B,H,nc,1,1) f32)."""
+    B, H, nc, Q, hd = x.shape
+    N = Bm.shape[-1]
+    grid = (B, H, nc)
+    kernel = _ssd_chunk_kernel
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, 1), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, 1), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, hd), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, hd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, N, hd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, 1), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, H, nc, N, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nc, 1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(a, dt, Bm, Cm, x)

@@ -1,0 +1,71 @@
+"""Full SSD scan assembled from the Pallas intra-chunk kernel + the XLA
+inter-chunk state recurrence.  Matches models/ssm.ssd_chunked bit-for-bit
+in f32 (tests sweep shapes/dtypes against it)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_intra_chunk
+from .ref import ssd_intra_chunk_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force_kernel", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
+             force_kernel: bool = False, interpret: bool = False):
+    """SSD over a full sequence.
+
+    x: (B, S, H, hd); dt: (B, S, H) f32; A: (H,) negative f32;
+    Bm, Cm: (B, S, N).  Returns (y (B,S,H,hd), state (B,H,N,hd) f32).
+    """
+    B, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+
+    xk = x.reshape(B, nc, chunk, H, hd).transpose(0, 3, 1, 2, 4)
+    dtk = dt.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)[..., None]
+    ak = (dtk[..., 0] * A[None, :, None, None])[..., None]
+    Bk = Bm.reshape(B, nc, chunk, N)
+    Ck = Cm.reshape(B, nc, chunk, N)
+
+    fn = ssd_intra_chunk if (force_kernel or _on_tpu()) else ssd_intra_chunk_ref
+    if fn is ssd_intra_chunk:
+        y, s_loc, dec = fn(ak.astype(jnp.float32), dtk.astype(jnp.float32),
+                           Bk, Ck, xk, interpret=interpret or not _on_tpu())
+    else:
+        y, s_loc, dec = fn(ak.astype(jnp.float32), dtk.astype(jnp.float32),
+                           Bk, Ck, xk)
+
+    # inter-chunk state recurrence (tiny, sequential -> XLA scan)
+    def step(s_carry, inp):
+        s_loc_c, dec_c = inp                      # dec_c: (B,H,1,1)
+        return dec_c * s_carry + s_loc_c, s_carry
+
+    s0 = jnp.zeros((B, H, N, hd), jnp.float32)
+    s_final, states_prev = jax.lax.scan(
+        step, s0, (s_loc.transpose(2, 0, 1, 3, 4), dec.transpose(2, 0, 1, 3, 4)))
+    states_prev = states_prev.transpose(1, 2, 0, 3, 4)        # (B,H,nc,N,hd)
+
+    # y_inter: C_i (exp cum_i) @ state_before_chunk
+    cum = jnp.cumsum(ak[..., 0], axis=-1)                     # (B,H,nc,Q)
+    y_inter = jnp.einsum("bcin,bhci,bhcnd->bhcid",
+                         Ck.astype(jnp.float32), jnp.exp(cum), states_prev)
+    y = y.astype(jnp.float32) + y_inter
+    y = y.transpose(0, 2, 3, 1, 4).reshape(B, Sp, H, hd)
+    if pad:
+        y = y[:, :S]
+    return y.astype(x.dtype), s_final

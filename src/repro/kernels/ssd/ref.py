@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(a, dt, Bm, Cm, x):
+    """Same contract as kernel.ssd_intra_chunk, materialized jnp math.
+
+    a, dt: (B, H, nc, Q, 1); Bm, Cm: (B, nc, Q, N); x: (B, H, nc, Q, hd).
+    """
+    B, H, nc, Q, hd = x.shape
+    af = a[..., 0].astype(jnp.float32)                       # (B,H,nc,Q)
+    dtf = dt[..., 0].astype(jnp.float32)
+    cum = jnp.cumsum(af, axis=-1)                            # (B,H,nc,Q)
+    dmat = cum[..., :, None] - cum[..., None, :]             # (B,H,nc,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(tri, dmat, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm.astype(jnp.float32),
+                        Bm.astype(jnp.float32))              # (B,nc,Q,Q)
+    w = scores[:, None] * L * dtf[..., None, :]              # (B,H,nc,Q,Q)
+    y = jnp.einsum("bhcij,bhcjd->bhcid", w.astype(x.dtype), x)
+
+    cum_last = cum[..., -1:]                                 # (B,H,nc,1)
+    decay = jnp.exp(cum_last - cum)                          # (B,H,nc,Q)
+    xw = x.astype(jnp.float32) * (dtf * decay)[..., None]
+    s_loc = jnp.einsum("bcjn,bhcjd->bhcnd", Bm.astype(jnp.float32), xw)
+    dec = jnp.exp(cum_last)[..., None]                       # (B,H,nc,1,1)
+    return y.astype(x.dtype), s_loc, dec

@@ -1,0 +1,16 @@
+"""Launchers: production meshes, AOT dry-run, training driver.
+
+NOTE: importing this package is safe (no jax device-state side effects);
+``repro.launch.dryrun`` as __main__ sets the 512-device XLA flag before
+importing jax and must run in its own process.
+"""
+
+from .mesh import (
+    CHIPS_PER_HOST, HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16, batch_axes,
+    device_coords, make_production_mesh,
+)
+
+__all__ = [
+    "make_production_mesh", "device_coords", "batch_axes",
+    "PEAK_FLOPS_BF16", "HBM_BW", "ICI_LINK_BW", "CHIPS_PER_HOST",
+]

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first backend init.  Only the dry-run gets 512 placeholder devices.
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape) cell on the
+production meshes, prove memory fits, and extract the roofline terms +
+collective traffic for FlowTracer.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all          # 32 cells x 2 meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+
+Per cell this writes results/dryrun/<mesh>/<arch>__<shape>.json with:
+memory_analysis, cost_analysis (FLOPs / bytes), per-kind collective wire
+bytes, ring-edge locality classes (intra-host / ICI / DCN), and the three
+roofline terms (EXPERIMENTS.md §Roofline reads these).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, applicable_shapes, get_arch, get_shape
+from ..core.hlo_flows import extract_collectives, summarize, collectives_to_flows
+from ..core.placement import ring_edge_stats
+from .flops import cell_cost, resident_bytes
+from .mesh import (
+    HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16, device_coords, make_production_mesh,
+)
+from .specs import build_cell
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str, *, force: bool = False, verbose: bool = True,
+             **build_kw) -> dict:
+    mesh_tag = "multi" if multi_pod else "single"
+    os.makedirs(os.path.join(out_dir, mesh_tag), exist_ok=True)
+    out_path = os.path.join(out_dir, mesh_tag, f"{arch_name}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    arch = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, **build_kw)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ops = extract_collectives(hlo)
+    summ = summarize(ops)
+    coords = device_coords(mesh)
+    flows, edge_stats = collectives_to_flows(ops, coords)
+
+    edge_classes = {"intra_host": 0, "intra_pod": 0, "inter_pod": 0}
+    for op in ops:
+        for g in op.groups:
+            if len(g) > 1:
+                st = ring_edge_stats(list(g), coords)
+                edge_classes["intra_host"] += st["intra_host"]
+                edge_classes["intra_pod"] += st["intra_pod"]
+                edge_classes["inter_pod"] += st["inter_pod"]
+
+    flops_hlo = float(cost.get("flops", 0.0))
+    bytes_hlo = float(cost.get("bytes accessed", 0.0))
+    wire = summ.total_wire_bytes
+
+    # Analytic FLOPs/bytes (XLA-CPU cost_analysis counts loop bodies once;
+    # see flops.py docstring).  Collective bytes from the HLO itself with
+    # while trip-count multipliers applied.
+    ac = cell_cost(
+        arch, shape,
+        n_params=cell.meta["params"], n_chips=n_chips,
+        model_shards=mesh.shape["model"],
+        data_shards=n_chips // mesh.shape["model"],
+        grad_accum=cell.meta.get("grad_accum", 1),
+        fsdp=cell.meta.get("fsdp", False),
+        opt_bytes_per_param=4 if cell.meta.get("opt_state_dtype") == "bfloat16" else 8,
+    )
+    flops_dev = ac.total_flops / n_chips
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = ac.hbm_bytes / HBM_BW
+    collective_s = wire / ICI_LINK_BW
+
+    # MODEL_FLOPS = 6*N*D train / 2*N*D fwd-only, D = tokens this step
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops_total = mult * cell.meta["active_params"] * tokens
+    model_flops_dev = model_flops_total / n_chips
+    useful = model_flops_dev / flops_dev if flops_dev else 0.0
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    res = resident_bytes(
+        arch, shape, n_params=cell.meta["params"], n_chips=n_chips,
+        model_shards=mesh.shape["model"],
+        grad_accum=cell.meta.get("grad_accum", 1),
+        fsdp=cell.meta.get("fsdp", False),
+        opt_bytes_per_param=4 if cell.meta.get("opt_state_dtype") == "bfloat16" else 8,
+    )
+
+    record = {
+        **cell.meta,
+        "mesh_tag": mesh_tag,
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+            "resident_analytic": res,
+        },
+        "cost": {
+            "flops_analytic_per_dev": flops_dev,
+            "hbm_bytes_analytic_per_dev": ac.hbm_bytes,
+            "fwd_flops_global": ac.fwd_flops,
+            "attn_flops_global": ac.attn_flops,
+            # raw XLA numbers (loop bodies counted once — reference only)
+            "flops_hlo_raw": flops_hlo,
+            "bytes_accessed_hlo_raw": bytes_hlo,
+        },
+        "collectives": {
+            "count_by_kind": summ.per_kind_count,
+            "wire_bytes_by_kind": summ.per_kind_wire,
+            "wire_bytes_total": wire,
+            "operand_bytes_total": summ.total_operand_bytes,
+            "edge_classes": edge_classes,
+            "dcn_flows": len(flows),
+            "dcn_bytes": edge_stats.dcn_bytes,
+            "ici_bytes": edge_stats.ici_bytes,
+        },
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_per_dev": model_flops_dev,
+            "useful_flop_ratio": useful,
+            "bound_s": max(terms.values()),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+
+    if verbose:
+        fit = "FITS" if res["total"] < 16 << 30 else "OVER 16GiB"
+        print(f"[{mesh_tag}] {arch_name} x {shape_name}: "
+              f"compile {t_compile:.0f}s, "
+              f"resident {res['total']/2**30:.2f} GiB ({fit}; cpu-peak "
+              f"{record['memory']['peak_bytes']/2**30:.1f}), "
+              f"flops/dev {flops_dev:.3g}, wire {wire/2**20:.1f} MiB, "
+              f"dominant={dominant} ({terms[dominant]*1e3:.2f} ms), "
+              f"useful={useful:.2f}")
+        print(f"  memory_analysis: {mem}")
+        ca = {k: v for k, v in sorted(cost.items()) if v}
+        print(f"  cost_analysis: { {k: round(v, 1) for k, v in list(ca.items())[:8]} }")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCHS.values():
+            for s in applicable_shapes(a):
+                cells.append((a.name, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for arch_name, shape_name in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch_name, shape_name, mp, args.out, force=args.force)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((arch_name, shape_name, mp, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(meshes)} dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

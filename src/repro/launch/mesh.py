@@ -1,0 +1,56 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because only dryrun.py runs with the
+512-device XLA flag.
+
+Topology convention (TPU v5e):
+  * a pod is 256 chips = 64 hosts x 4 chips;
+  * single-pod mesh (data=16, model=16);
+  * multi-pod mesh (pod=2, data=16, model=16) — the 'pod' axis crosses
+    the DCN leaf-spine fabric, which is where the paper's ECMP analysis
+    applies (DESIGN.md section 2).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_LINK_BW = 50e9                # bytes/s per link
+DCN_HOST_GBPS = 100.0             # per-host NIC for the DCN fabric model
+CHIPS_PER_HOST = 4
+HOSTS_PER_POD = 64
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def device_coords(mesh: jax.sharding.Mesh) -> dict[int, tuple[int, int, int]]:
+    """device id -> (pod, global_host, chip-in-host) for hlo_flows.
+
+    Devices are laid out C-order over the mesh axes; within a pod,
+    consecutive device ids share a host in groups of CHIPS_PER_HOST.
+    """
+    ids = [d.id for d in mesh.devices.flat]
+    npods = mesh.shape.get("pod", 1)
+    per_pod = len(ids) // npods
+    coords = {}
+    for i, dev in enumerate(ids):
+        pod = i // per_pod
+        within = i % per_pod
+        host = pod * (per_pod // CHIPS_PER_HOST) + within // CHIPS_PER_HOST
+        coords[dev] = (pod, host, within % CHIPS_PER_HOST)
+    return coords
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)

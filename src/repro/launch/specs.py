@@ -1,0 +1,269 @@
+"""Per-cell build logic: for every (arch x shape x mesh) produce the step
+function, ShapeDtypeStruct inputs, and in/out shardings for AOT lowering.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins, zero device allocation — the 398B jamba cell lowers
+on a laptop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.model import Model
+from ..models.lm import RematPolicy
+from ..parallel.sharding import (
+    batch_specs, cache_partition_specs, param_specs, to_shardings,
+)
+from ..train.optimizer import AdamWConfig
+from ..train.step import TrainConfig, make_train_step
+from .mesh import batch_axes
+
+SDS = jax.ShapeDtypeStruct
+
+# activation budget per device used to pick grad_accum (bytes)
+_ACT_BUDGET = 3 << 30
+
+
+@dataclasses.dataclass
+class CellBuild:
+    arch: ArchConfig
+    shape: ShapeConfig
+    fn: Callable
+    args: tuple                      # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    meta: dict
+
+
+def _params_sds(model: Model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def count_params_tree(tree) -> int:
+    return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def active_params(cfg: ArchConfig, total: int) -> int:
+    """Active params per token for the 6*N*D MODEL_FLOPS convention."""
+    if not cfg.moe:
+        return total
+    e = cfg.moe
+    expert_p = 3 * cfg.d_model * e.d_ff_expert
+    n_moe_layers = (cfg.num_layers - e.first_dense_layers)
+    if e.every_k_layers > 1:
+        n_moe_layers = cfg.num_layers // e.every_k_layers
+    inactive = n_moe_layers * (e.num_experts - e.top_k) * expert_p
+    return total - inactive
+
+
+def pick_grad_accum(cfg: ArchConfig, shape: ShapeConfig, data_shards: int) -> int:
+    """Default: microbatch of one sequence per data shard.  Combined with
+    sqrt-remat grouping this keeps saved activations ~ 2*sqrt(L) * S * D
+    per device for every assigned arch; cells that could afford larger
+    microbatches recover throughput via the §Perf hillclimb instead."""
+    return max(1, shape.global_batch // data_shards)
+
+
+def _batch_sds(cfg: ArchConfig, shape: ShapeConfig, *, with_labels: bool) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        batch["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        batch["mrope_positions"] = SDS((3, B, S), jnp.int32)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = SDS((B, cfg.encdec.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+    if with_labels:
+        batch["labels"] = SDS((B, S), jnp.int32)
+    return batch
+
+
+def _decode_batch_sds(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    batch: dict[str, Any] = {"tokens": SDS((B, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        # decode consumes text tokens; M-RoPE positions for the new token
+        batch["mrope_positions"] = SDS((3, B, 1), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_memory"] = SDS((B, cfg.encdec.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+    return batch
+
+
+def _spec_tree_for_batch(batch: dict, baxes: tuple[str, ...]) -> dict:
+    table = batch_specs(baxes)
+    return {k: table[k] for k in batch}
+
+
+def build_cell(
+    arch: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+    fsdp_threshold_params: int = 10_000_000_000,
+    remat_policy: str = "nothing_saveable",
+    opt_state_dtype: str | None = None,
+    grad_accum_override: int | None = None,
+    moe_impl: str | None = None,
+    pin_activations: bool | None = None,
+) -> CellBuild:
+    # §Perf-derived per-family defaults: dense archs pin the residual
+    # stream batch-sharded (3x collective reduction on qwen2-72b); MoE
+    # archs run expert-parallel with XLA-chosen activation layouts
+    # (pinning regresses the dispatch path 5x; see EXPERIMENTS.md §Perf).
+    if pin_activations is None:
+        pin_activations = arch.moe is None
+    if moe_impl is None and arch.moe:
+        moe_impl = "ep"
+    if moe_impl and arch.moe:
+        arch = dataclasses.replace(
+            arch, moe=dataclasses.replace(arch.moe, impl=moe_impl))
+    model_size = mesh.shape["model"]
+    data_shards = math.prod(
+        mesh.shape[a] for a in mesh.shape if a in ("pod", "data"))
+    baxes = batch_axes(mesh)
+    b = baxes if len(baxes) > 1 else baxes[0]
+
+    model = Model(arch, remat=RematPolicy(enabled=shape.kind == "train",
+                                          policy=remat_policy))
+    p_sds = _params_sds(model)
+    n_params = count_params_tree(p_sds)
+    n_active = active_params(arch, n_params)
+    use_fsdp = n_params >= fsdp_threshold_params and shape.kind == "train"
+    attn_ok = arch.num_heads % model_size == 0
+    pspec = param_specs(
+        p_sds, model_size=model_size,
+        fsdp_axis="data" if use_fsdp else None,
+        fsdp_size=mesh.shape.get("data", 1),
+        attention_shardable=attn_ok,
+    )
+    p_shard = to_shardings(mesh, pspec)
+
+    if use_fsdp:
+        # FSDP per-layer unshard: inside the layer scan, each SLICED
+        # layer's params are re-pinned to TP-only (data dropped), so XLA
+        # gathers one layer instead of the whole stack per iteration
+        # (§Perf iteration 1).
+        stack_key = "periods" if arch.family == "hybrid" else "layers"
+
+        def strip(s: P) -> P:
+            return P(*[None if ax == "data" else ax for ax in list(s)[1:]])
+
+        lspecs = jax.tree.map(strip, pspec[stack_key],
+                              is_leaf=lambda x: isinstance(x, P))
+        model = dataclasses.replace(model, layer_specs=lspecs)
+
+    if shape.kind == "train" and pin_activations:
+        # pin the residual stream batch-sharded inside every scanned block
+        model = dataclasses.replace(model, act_spec=P(b, None, None))
+
+    meta = {
+        "arch": arch.name, "shape": shape.name, "kind": shape.kind,
+        "params": n_params, "active_params": n_active, "fsdp": use_fsdp,
+        "mesh": dict(mesh.shape), "attention_tp": attn_ok,
+    }
+
+    if shape.kind == "train":
+        if opt_state_dtype is None:
+            opt_state_dtype = "bfloat16" if n_params > 100_000_000_000 else "float32"
+        accum = grad_accum_override or pick_grad_accum(arch, shape, data_shards)
+        meta["grad_accum"] = accum
+        meta["opt_state_dtype"] = opt_state_dtype
+        # ZeRO-2 accumulator: grads sharded over 'data' during accumulation
+        # (reduce-scatter per microbatch, one gather at the update) — for
+        # non-FSDP archs whose params are replicated over data.
+        accum_specs = None
+        if not use_fsdp:
+            accum_specs = param_specs(
+                p_sds, model_size=model_size, fsdp_axis="data",
+                fsdp_size=mesh.shape.get("data", 1),
+                fsdp_min_size=1 << 20,
+                attention_shardable=attn_ok,
+            )
+        tc = TrainConfig(
+            optimizer=AdamWConfig(state_dtype=opt_state_dtype),
+            grad_accum=accum,
+            batch_axes=baxes,
+            accum_specs=accum_specs,
+        )
+        step = make_train_step(model, tc)
+        opt_dt = jnp.bfloat16 if opt_state_dtype == "bfloat16" else jnp.float32
+        o_sds = {
+            "m": jax.tree.map(lambda l: SDS(l.shape, opt_dt), p_sds),
+            "v": jax.tree.map(lambda l: SDS(l.shape, opt_dt), p_sds),
+            "step": SDS((), jnp.int32),
+        }
+        o_spec = {"m": pspec, "v": pspec, "step": P()}
+        o_shard = to_shardings(mesh, o_spec)
+        batch = _batch_sds(arch, shape, with_labels=True)
+        bspec = _spec_tree_for_batch(batch, baxes)
+        b_shard = to_shardings(mesh, bspec)
+        metrics_shard = NamedSharding(mesh, P())
+        return CellBuild(
+            arch=arch, shape=shape, fn=step,
+            args=(p_sds, o_sds, batch),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard,
+                           jax.tree.map(lambda _: metrics_shard,
+                                        {"loss": 0, "grad_norm": 0, "lr": 0})),
+            donate_argnums=(0, 1),
+            meta=meta,
+        )
+
+    if shape.kind == "prefill":
+        def prefill_last(params, batch):
+            return model.prefill(params, batch, last_only=True)[:, 0, :]
+
+        batch = _batch_sds(arch, shape, with_labels=False)
+        bspec = _spec_tree_for_batch(batch, baxes)
+        return CellBuild(
+            arch=arch, shape=shape, fn=prefill_last,
+            args=(p_sds, batch),
+            in_shardings=(p_shard, to_shardings(mesh, bspec)),
+            out_shardings=NamedSharding(mesh, P(b, None)),
+            donate_argnums=(),
+            meta=meta,
+        )
+
+    # decode: one token against a cache of seq_len
+    cache_spec_tree = model.cache_specs(shape.global_batch, shape.seq_len)
+    c_sds = jax.tree.map(
+        lambda sd: SDS(sd[0], sd[1]), cache_spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple))
+    cpspec = cache_partition_specs(
+        cache_spec_tree, batch_axes=baxes, model_size=model_size,
+        batch_size_total=data_shards,
+    )
+    c_shard = to_shardings(mesh, cpspec)
+    batch = _decode_batch_sds(arch, shape)
+    bspec = _spec_tree_for_batch(batch, baxes)
+    if shape.global_batch < data_shards:
+        # long-context decode: batch of 1 cannot ride the batch axes
+        bspec = jax.tree.map(lambda s: P(*(None,) * len(s)), bspec,
+                             is_leaf=lambda x: isinstance(x, P))
+    idx = SDS((), jnp.int32)
+
+    def serve_step(params, caches, batch, index):
+        return model.decode_step(params, caches, batch, index)
+
+    return CellBuild(
+        arch=arch, shape=shape, fn=serve_step,
+        args=(p_sds, c_sds, batch, idx),
+        in_shardings=(p_shard, c_shard, to_shardings(mesh, bspec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(
+            NamedSharding(mesh, P(b if shape.global_batch >= data_shards
+                                  else None, None, None)),
+            c_shard,
+        ),
+        donate_argnums=(1,),
+        meta=meta,
+    )

@@ -1,0 +1,9 @@
+"""Model substrate: layers, families, and the public Model API."""
+
+from .model import Model, cross_entropy
+from .lm import RematPolicy, init_lm, lm_forward, cache_specs, init_cache
+
+__all__ = [
+    "Model", "cross_entropy", "RematPolicy", "init_lm", "lm_forward",
+    "cache_specs", "init_cache",
+]

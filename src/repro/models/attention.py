@@ -1,0 +1,295 @@
+"""Attention variants: GQA (RoPE / M-RoPE, optional bias), MLA
+(DeepSeek-V2 latent attention, absorbed decode), cross-attention
+(enc-dec), and a chunked online-softmax path for long sequences.
+
+The chunked path is the pure-XLA twin of the Pallas flash kernel
+(kernels/flash_attention): same math, scan over KV blocks with a running
+(max, sum, acc) triple, so activation memory stays O(S * block) instead of
+O(S^2).  It is also the oracle the kernel tests compare against.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import InitCtx, apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (GQA-aware)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores_shape(q, k):
+    # q: (B, Sq, H, hd), k: (B, Sk, Hkv, hd) with H = G * Hkv
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    return B, Sq, H, hd, Hkv, G
+
+
+def plain_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool, q_offset, window: int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Materialized-scores attention (decode / short sequences).
+
+    q_offset: scalar (traced ok) absolute position of q[0] for causal
+    masking against the kv positions 0..Sk-1.
+    kv_valid_len: if given, kv positions >= this are masked (cache slots).
+    """
+    B, Sq, H, hd, Hkv, G = _gqa_scores_shape(q, k)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    k_pos = jnp.arange(k.shape[1])
+    q_pos = q_offset + jnp.arange(Sq)
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_valid_len is not None:
+        mask &= k_pos[None, :] < kv_valid_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool, window: int = 0, chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV in blocks (flash-style).
+
+    Memory: O(B * H * Sq * chunk) instead of O(B * H * Sq * Sk).
+    """
+    B, Sq, H, hd, Hkv, G = _gqa_scores_shape(q, k)
+    Sk = k.shape[1]
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+
+    qg = (q.reshape(B, Sq, Hkv, G, hd) * (1.0 / jnp.sqrt(hd))).astype(q.dtype)
+    q_pos = jnp.arange(Sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        idx, kb, vb = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb).astype(jnp.float32)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] < Sk
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
+        acc_new = acc * scale[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, v.shape[-1])
+    return out.astype(q.dtype)
+
+
+def attention_any(q, k, v, *, causal, q_offset=0, window=0,
+                  kv_valid_len=None, chunk_threshold: int = 2048):
+    """Dispatch: chunked for long self-attention, plain otherwise."""
+    if q.shape[1] > 1 and k.shape[1] > chunk_threshold and kv_valid_len is None \
+            and q.shape[1] == k.shape[1]:
+        return chunked_attention(q, k, v, causal=causal, window=window)
+    return plain_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           window=window, kv_valid_len=kv_valid_len)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (granite / glm4 / codeqwen / qwen2 / qwen2-vl / jamba-attn /
+# whisper self-attn)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(ctx: InitCtx, cfg: ArchConfig, prefix: str) -> dict:
+    hd, H, Hkv, D = cfg.hd, cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    p = {
+        "wq": ctx.make(f"{prefix}.wq", (D, H * hd)),
+        "wk": ctx.make(f"{prefix}.wk", (D, Hkv * hd)),
+        "wv": ctx.make(f"{prefix}.wv", (D, Hkv * hd)),
+        "wo": ctx.make(f"{prefix}.wo", (H * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ctx.make(f"{prefix}.bq", (H * hd,), zero=True)
+        p["bk"] = ctx.make(f"{prefix}.bk", (Hkv * hd,), zero=True)
+        p["bv"] = ctx.make(f"{prefix}.bv", (Hkv * hd,), zero=True)
+    return p
+
+
+def gqa_forward(
+    p: dict, cfg: ArchConfig, x: jax.Array, *,
+    positions: jax.Array,                     # (B, S) absolute positions
+    causal: bool = True,
+    window: int = 0,
+    mrope_positions: Optional[jax.Array] = None,   # (3, B, S)
+    cache: Optional[dict] = None,             # {"k","v"}: (B, Smax, Hkv, hd)
+    cache_index: Optional[jax.Array] = None,  # scalar write slot
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    hd, H, Hkv = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+
+    if cfg.mrope_sections and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        assert cache_index is not None
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        # causal with q_offset doubles as the valid-length mask: slots past
+        # cache_index+S-1 hold stale data and are masked by q_pos >= k_pos.
+        out = plain_attention(
+            q, ck, cv, causal=True, q_offset=cache_index, window=window)
+    else:
+        out = attention_any(q, k, v, causal=causal, window=window)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (deepseek-v2): latent-compressed KV, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(ctx: InitCtx, cfg: ArchConfig, prefix: str) -> dict:
+    m = cfg.mla
+    H, D = cfg.num_heads, cfg.d_model
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": ctx.make(f"{prefix}.wq", (D, H * qk)),
+        "w_dkv": ctx.make(f"{prefix}.w_dkv", (D, m.kv_lora_rank + m.qk_rope_dim)),
+        "kv_norm": ctx.make(f"{prefix}.kv_norm", (m.kv_lora_rank,), scale="embed"),
+        "w_uk": ctx.make(f"{prefix}.w_uk", (m.kv_lora_rank, H * m.qk_nope_dim)),
+        "w_uv": ctx.make(f"{prefix}.w_uv", (m.kv_lora_rank, H * m.v_head_dim)),
+        "wo": ctx.make(f"{prefix}.wo", (H * m.v_head_dim, D)),
+    }
+
+
+def mla_forward(
+    p: dict, cfg: ArchConfig, x: jax.Array, *,
+    positions: jax.Array,
+    cache: Optional[dict] = None,      # {"latent": (B, Smax, lora+rope)}
+    cache_index: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    from .common import rms_norm
+
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads
+    nope, rope, dv, lora = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dh->bsh", x, p["w_dkv"])        # (B,S,lora+rope)
+    latent = rms_norm(dkv[..., :lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, lora:], positions, cfg.rope_theta)  # (B,S,1,rope)
+
+    if cache is None:
+        # Train / prefill: decompress per head and run standard attention.
+        k_nope = jnp.einsum("bsl,lh->bsh", latent, p["w_uk"]).reshape(B, S, H, nope)
+        v = jnp.einsum("bsl,lh->bsh", latent, p["w_uv"]).reshape(B, S, H, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], -1)
+        qfull = jnp.concatenate([q_nope, q_rope], -1)
+        out = attention_any(qfull, k, v, causal=True)
+        y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * dv), p["wo"])
+        return y, None
+
+    # Absorbed decode: attend in latent space; cache holds (latent ++ k_rope).
+    assert cache_index is not None
+    entry = jnp.concatenate([latent, k_rope[:, :, 0, :]], -1)  # (B,S,lora+rope)
+    cl = jax.lax.dynamic_update_slice(
+        cache["latent"], entry.astype(cache["latent"].dtype), (0, cache_index, 0))
+    new_cache = {"latent": cl}
+    c_lat, c_rope = cl[..., :lora], cl[..., lora:]
+    w_uk = p["w_uk"].reshape(lora, H, nope)
+    # fold k up-projection into q:  q_lat (B,S,H,lora)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)
+    scores = (
+        jnp.einsum("bshl,btl->bhst", q_lat, c_lat)
+        + jnp.einsum("bshr,btr->bhst", q_rope, c_rope)
+    ).astype(jnp.float32) * (1.0 / jnp.sqrt(nope + rope))
+    t_pos = jnp.arange(cl.shape[1])
+    valid = t_pos[None, :] <= (cache_index + jnp.arange(S))[:, None]
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btl->bshl", probs, c_lat)       # (B,S,H,lora)
+    w_uv = p["w_uv"].reshape(lora, H, dv)
+    out = jnp.einsum("bshl,lhv->bshv", ctx_lat, w_uv)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * dv), p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross(ctx: InitCtx, cfg: ArchConfig, prefix: str) -> dict:
+    hd, H, D = cfg.hd, cfg.num_heads, cfg.d_model
+    return {
+        "wq": ctx.make(f"{prefix}.wq", (D, H * hd)),
+        "wk": ctx.make(f"{prefix}.wk", (D, H * hd)),
+        "wv": ctx.make(f"{prefix}.wv", (D, H * hd)),
+        "wo": ctx.make(f"{prefix}.wo", (H * hd, D)),
+    }
+
+
+def cross_forward(p: dict, cfg: ArchConfig, x: jax.Array,
+                  memory: jax.Array) -> jax.Array:
+    """x: (B, S, D) decoder states; memory: (B, Se, D) encoder output."""
+    B, S, D = x.shape
+    Se = memory.shape[1]
+    hd, H = cfg.hd, cfg.num_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", memory, p["wk"]).reshape(B, Se, H, hd)
+    v = jnp.einsum("bsd,dh->bsh", memory, p["wv"]).reshape(B, Se, H, hd)
+    out = plain_attention(q, k, v, causal=False, q_offset=0)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), p["wo"])

@@ -1,0 +1,573 @@
+"""Model composition: decoder-only LMs (dense / MoE / SSM / hybrid), the
+enc-dec (whisper) variant, caches, and the family dispatch used by
+train/serve steps.
+
+Layers are STACKED (leading num_layers axis) and executed with
+``jax.lax.scan`` so the HLO contains one layer body regardless of depth —
+essential for CPU-host compile times at 512 fake devices, and standard
+practice on real TPM pods.  Training wraps the block in ``jax.checkpoint``
+(remat) with a configurable policy.
+
+Caches are pytrees stacked the same way and threaded through the scan as
+(xs -> ys), so decode updates every layer's cache in one pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (
+    cross_forward, gqa_forward, init_cross, init_gqa, init_mla, mla_forward,
+)
+from .common import InitCtx, layer_norm, rms_norm, swiglu, gelu_mlp
+from .moe import init_moe, moe_forward
+from .ssm import (
+    init_mamba1, init_mamba2, mamba1_cache_spec, mamba1_forward,
+    mamba2_cache_spec, mamba2_forward,
+)
+
+
+class _Stacked:
+    """InitCtx adapter: every made param gets a leading (L,) stack axis."""
+
+    def __init__(self, ctx: InitCtx, layers: int):
+        self.ctx, self.L = ctx, layers
+        self.dtype = ctx.dtype
+
+    def make(self, path, shape, **kw):
+        return self.ctx.make(path, (self.L, *shape), **kw)
+
+    def const(self, path, value):
+        v = jnp.asarray(value)
+        return jnp.broadcast_to(v, (self.L, *v.shape)).copy()
+
+
+# ---------------------------------------------------------------------------
+# Per-family layer bodies.  Signature: (params, cfg, x, aux-inputs) -> x', cache'
+# ---------------------------------------------------------------------------
+
+
+def _mlp_params(ctx, cfg, prefix, d_ff):
+    return {
+        "w_gate": ctx.make(f"{prefix}.w_gate", (cfg.d_model, d_ff)),
+        "w_up": ctx.make(f"{prefix}.w_up", (cfg.d_model, d_ff)),
+        "w_down": ctx.make(f"{prefix}.w_down", (d_ff, cfg.d_model)),
+    }
+
+
+def _dense_layer_params(ctx, cfg: ArchConfig) -> dict:
+    p = {
+        "ln1": ctx.make("ln1", (cfg.d_model,), scale="embed"),
+        "ln2": ctx.make("ln2", (cfg.d_model,), scale="embed"),
+    }
+    if cfg.mla:
+        p["attn"] = init_mla(ctx, cfg, "attn")
+    else:
+        p["attn"] = init_gqa(ctx, cfg, "attn")
+    if cfg.moe and not cfg.mla:  # uniform moe (qwen2-moe)
+        p["mlp"] = init_moe(ctx, cfg, "moe")
+    elif cfg.moe and cfg.mla:    # deepseek moe layers
+        p["mlp"] = init_moe(ctx, cfg, "moe")
+    else:
+        p["mlp"] = _mlp_params(ctx, cfg, "mlp", cfg.d_ff)
+    return p
+
+
+def _dense_layer(p, cfg: ArchConfig, x, *, positions, mrope_positions=None,
+                 cache=None, cache_index=None, window=0):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        attn_out, new_cache = mla_forward(
+            p["attn"], cfg, h, positions=positions, cache=cache,
+            cache_index=cache_index)
+    else:
+        attn_out, new_cache = gqa_forward(
+            p["attn"], cfg, h, positions=positions, causal=True, window=window,
+            mrope_positions=mrope_positions, cache=cache,
+            cache_index=cache_index)
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        mlp_out, aux = moe_forward(p["mlp"], cfg, h)
+    else:
+        mlp_out = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x + mlp_out, new_cache, aux
+
+
+def _ssm_layer(p, cfg: ArchConfig, x, *, cache=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, new_cache = mamba2_forward(p["mixer"], cfg, h, cache=cache)
+    return x + out, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (jamba) period: 7 mamba1 sublayers + 1 attention, MoE every other.
+# ---------------------------------------------------------------------------
+
+
+def _jamba_period_params(ctx_outer: InitCtx, cfg: ArchConfig, n_periods: int):
+    hyb = cfg.hybrid
+    per = hyb.period
+    n_mamba = per - 1
+    sctx = _Stacked(ctx_outer, n_periods)
+
+    def stack2(path, shape, inner, **kw):
+        return ctx_outer.make(path, (n_periods, inner, *shape), **kw)
+
+    class _S2:
+        """Stack (n_periods, inner) leading axes."""
+        def __init__(self, inner):
+            self.inner = inner
+            self.dtype = ctx_outer.dtype
+        def make(self, path, shape, **kw):
+            return stack2(path, shape, self.inner, **kw)
+        def const(self, path, value):
+            v = jnp.asarray(value)
+            return jnp.broadcast_to(v, (n_periods, self.inner, *v.shape)).copy()
+
+    mctx = _S2(n_mamba)
+    p = {
+        "mamba": {
+            "mixer": init_mamba1(mctx, cfg, "mamba.mixer"),
+            "ln": mctx.make("mamba.ln", (cfg.d_model,), scale="embed"),
+        },
+        "attn": {
+            "attn": init_gqa(sctx, cfg, "attn"),
+            "ln": sctx.make("attn.ln", (cfg.d_model,), scale="embed"),
+        },
+    }
+    # FFN after every sublayer: MoE on odd in-period index, dense on even.
+    n_moe = per // 2
+    n_dense = per - n_moe
+    dctx, ectx = _S2(n_dense), _S2(n_moe)
+    p["dense_ffn"] = {
+        **_mlp_params(dctx, cfg, "ffn", cfg.d_ff),
+        "ln": dctx.make("ffn.ln", (cfg.d_model,), scale="embed"),
+    }
+    p["moe_ffn"] = {
+        **init_moe(ectx, cfg, "moe"),
+        "ln": ectx.make("moe.ln", (cfg.d_model,), scale="embed"),
+    }
+    return p
+
+
+def _jamba_period(p, cfg: ArchConfig, x, *, positions, caches, cache_index,
+                  window):
+    """One period of `period` sublayers.  ``caches`` may be None (train)."""
+    hyb = cfg.hybrid
+    per, attn_idx = hyb.period, hyb.attn_index
+    new_attn_cache = None
+    new_mamba_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    mi = di = ei = 0
+    for l in range(per):
+        if l == attn_idx:
+            ap = p["attn"]
+            h = rms_norm(x, ap["ln"], cfg.norm_eps)
+            cache = None if caches is None else caches["attn"]
+            out, new_attn_cache = gqa_forward(
+                ap["attn"], cfg, h, positions=positions, causal=True,
+                window=window, cache=cache, cache_index=cache_index)
+            x = x + out
+        else:
+            mp = jax.tree.map(lambda a: a[mi], p["mamba"])
+            h = rms_norm(x, mp["ln"], cfg.norm_eps)
+            cache = None if caches is None else \
+                jax.tree.map(lambda a: a[mi], caches["mamba"])
+            out, nc = mamba1_forward(mp["mixer"], cfg, h, cache=cache)
+            if nc is not None:
+                new_mamba_caches.append(nc)
+            x = x + out
+            mi += 1
+        if l % 2 == 1:  # MoE
+            fp = jax.tree.map(lambda a: a[ei], p["moe_ffn"])
+            h = rms_norm(x, fp["ln"], cfg.norm_eps)
+            out, aux = moe_forward({k: v for k, v in fp.items() if k != "ln"},
+                                   cfg, h)
+            aux_total = aux_total + aux
+            x = x + out
+            ei += 1
+        else:
+            fp = jax.tree.map(lambda a: a[di], p["dense_ffn"])
+            h = rms_norm(x, fp["ln"], cfg.norm_eps)
+            x = x + swiglu(h, fp["w_gate"], fp["w_up"], fp["w_down"])
+            di += 1
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "attn": new_attn_cache,
+            "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba_caches),
+        }
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Top-level LM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RematPolicy:
+    enabled: bool = True
+    policy: str = "nothing_saveable"   # or dots_with_no_batch_dims_saveable
+    # sqrt-remat: scan groups of G layers inside a scan of L/G groups, both
+    # checkpointed -> live saved activations ~ (L/G + G) instead of L.
+    # 0 = auto (largest divisor of L <= sqrt(L)); 1 = flat scan.
+    scan_group: int = 0
+
+    def wrap(self, fn):
+        if not self.enabled:
+            return fn
+        pol = getattr(jax.checkpoint_policies, self.policy, None)
+        return jax.checkpoint(fn, policy=pol)
+
+    def group_for(self, L: int) -> int:
+        if not self.enabled:
+            return 1
+        if self.scan_group:
+            return self.scan_group if L % self.scan_group == 0 else 1
+        g = int(math.isqrt(L))
+        while g > 1 and L % g:
+            g -= 1
+        return g
+
+
+def _maybe_constrain_layer(lp, specs):
+    """FSDP per-layer unshard: re-pin each SLICED layer's params to their
+    TP-only sharding (the 'data' axis dropped).  Without this, XLA
+    partitions scan slicing as gather-the-whole-stack-inside-the-loop:
+    the 72B train cell moved 12 TiB/device/step of all-reduce+gather
+    before this constraint (EXPERIMENTS.md §Perf iteration 1)."""
+    if specs is None:
+        return lp
+    return jax.tree.map(
+        lambda a, s: jax.lax.with_sharding_constraint(a, s) if s is not None else a,
+        lp, specs, is_leaf=lambda q: q is None)
+
+
+def scan_layers_remat(block, x, stacked, remat: "RematPolicy",
+                      layer_specs=None, act_spec=None):
+    """Scan ``block`` over stacked layer params with sqrt-remat grouping.
+    block: (x, layer_params) -> (x, y).  Returns (x, ys) with ys flat (L, ...).
+    layer_specs: optional pytree of PartitionSpecs (per SLICED layer leaf)
+    applied inside the loop body (FSDP per-layer gather).
+    act_spec: optional PartitionSpec pinning the residual-stream carry at
+    every block entry — without it, FSDP weight shardings pull XLA into
+    batch-replicated partial-sum activations (the 12 TiB/step all-reduce
+    pathology, §Perf iteration 2)."""
+    L = jax.tree.leaves(stacked)[0].shape[0]
+    G = remat.group_for(L)
+
+    def cblock(x, lp):
+        if act_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        return block(x, _maybe_constrain_layer(lp, layer_specs))
+
+    if G <= 1 or L % G:
+        return jax.lax.scan(remat.wrap(cblock), x, stacked)
+    grouped = jax.tree.map(
+        lambda a: a.reshape(L // G, G, *a.shape[1:]), stacked)
+
+    def group_block(x, gp):
+        return jax.lax.scan(remat.wrap(cblock), x, gp)
+
+    x, ys = jax.lax.scan(remat.wrap(group_block), x, grouped)
+    ys = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), ys)
+    return x, ys
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array) -> dict:
+    ctx = InitCtx(key=key, dtype=cfg.param_dtype())
+    params: dict[str, Any] = {
+        "embed": ctx.make("embed", (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_norm": ctx.make("final_norm", (cfg.d_model,), scale="embed"),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ctx.make("lm_head", (cfg.d_model, cfg.vocab))
+
+    if cfg.family == "hybrid":
+        n_periods = cfg.num_layers // cfg.hybrid.period
+        params["periods"] = _jamba_period_params(ctx, cfg, n_periods)
+    elif cfg.family == "ssm":
+        sctx = _Stacked(ctx, cfg.num_layers)
+        params["layers"] = {
+            "mixer": init_mamba2(sctx, cfg, "mixer"),
+            "ln1": sctx.make("ln1", (cfg.d_model,), scale="embed"),
+        }
+    elif cfg.family == "encdec":
+        ec = cfg.encdec
+        ectx = _Stacked(ctx, ec.num_encoder_layers)
+        params["encoder"] = {
+            "attn": init_gqa(ectx, cfg, "enc.attn"),
+            "mlp": {
+                "w_in": ectx.make("enc.w_in", (cfg.d_model, cfg.d_ff)),
+                "b_in": ectx.make("enc.b_in", (cfg.d_ff,), zero=True),
+                "w_out": ectx.make("enc.w_out", (cfg.d_ff, cfg.d_model)),
+                "b_out": ectx.make("enc.b_out", (cfg.d_model,), zero=True),
+            },
+            "ln1": ectx.make("enc.ln1", (cfg.d_model,), scale="embed"),
+            "ln1b": ectx.make("enc.ln1b", (cfg.d_model,), zero=True),
+            "ln2": ectx.make("enc.ln2", (cfg.d_model,), scale="embed"),
+            "ln2b": ectx.make("enc.ln2b", (cfg.d_model,), zero=True),
+        }
+        dctx = _Stacked(ctx, cfg.num_layers)
+        params["layers"] = {
+            "attn": init_gqa(dctx, cfg, "dec.attn"),
+            "cross": init_cross(dctx, cfg, "dec.cross"),
+            "mlp": {
+                "w_in": dctx.make("dec.w_in", (cfg.d_model, cfg.d_ff)),
+                "b_in": dctx.make("dec.b_in", (cfg.d_ff,), zero=True),
+                "w_out": dctx.make("dec.w_out", (cfg.d_ff, cfg.d_model)),
+                "b_out": dctx.make("dec.b_out", (cfg.d_model,), zero=True),
+            },
+            "ln1": dctx.make("dec.ln1", (cfg.d_model,), scale="embed"),
+            "ln1b": dctx.make("dec.ln1b", (cfg.d_model,), zero=True),
+            "lnx": dctx.make("dec.lnx", (cfg.d_model,), scale="embed"),
+            "lnxb": dctx.make("dec.lnxb", (cfg.d_model,), zero=True),
+            "ln2": dctx.make("dec.ln2", (cfg.d_model,), scale="embed"),
+            "ln2b": dctx.make("dec.ln2b", (cfg.d_model,), zero=True),
+        }
+        params["enc_final_norm_b"] = ctx.make("efnb", (cfg.d_model,), zero=True)
+        params["final_norm_b"] = ctx.make("fnb", (cfg.d_model,), zero=True)
+    else:  # dense / moe / vlm — uniform layers, maybe an unrolled first layer
+        first_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+        if first_dense:
+            dense_cfg = dataclasses.replace(cfg, moe=None)
+            params["layer0"] = _dense_layer_params(ctx, dense_cfg)
+        sctx = _Stacked(ctx, cfg.num_layers - first_dense)
+        params["layers"] = _dense_layer_params(sctx, cfg)
+    return params
+
+
+def _embed(params, cfg, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.param_dtype())
+    else:
+        x = params["embed"][batch["tokens"]]
+    return x
+
+
+def _unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def _run_encoder(params, cfg, enc_embeds, remat: "RematPolicy"):
+    """Whisper encoder over stub frame embeddings (B, Se, D)."""
+    x = enc_embeds.astype(cfg.param_dtype())
+    Se = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Se), x.shape[:2])
+
+    def block(x, lp):
+        h = layer_norm(x, lp["ln1"], lp["ln1b"], cfg.norm_eps)
+        out, _ = gqa_forward(lp["attn"], cfg, h, positions=positions,
+                             causal=False)
+        x = x + out
+        h = layer_norm(x, lp["ln2"], lp["ln2b"], cfg.norm_eps)
+        x = x + gelu_mlp(h, lp["mlp"]["w_in"], lp["mlp"]["b_in"],
+                         lp["mlp"]["w_out"], lp["mlp"]["b_out"])
+        return x, jnp.zeros((), jnp.float32)
+
+    x, _ = scan_layers_remat(block, x, params["encoder"], remat)
+    return layer_norm(x, params["final_norm"], params["enc_final_norm_b"],
+                      cfg.norm_eps)
+
+
+def lm_forward(
+    params: dict, cfg: ArchConfig, batch: dict, *,
+    remat: RematPolicy = RematPolicy(),
+    caches: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    window_override: Optional[int] = None,
+    last_only: bool = False,
+    layer_specs=None,
+    act_spec=None,
+) -> tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (logits (B,S,V), new_caches | None, moe_aux).
+    last_only: unembed only the final position (prefill serving)."""
+    x = _embed(params, cfg, batch)
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+    B, S = x.shape[:2]
+    if cache_index is not None:
+        positions = jnp.broadcast_to(cache_index + jnp.arange(S), (B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mrope_positions = batch.get("mrope_positions")
+    window = window_override if window_override is not None else 0
+
+    new_caches = None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        if caches is None:
+            def tblock(x, lp):
+                x, _, aux = _jamba_period(
+                    lp, cfg, x, positions=positions, caches=None,
+                    cache_index=None, window=window)
+                return x, aux
+            x, auxs = scan_layers_remat(tblock, x, params["periods"], remat,
+                                        layer_specs=layer_specs,
+                                        act_spec=act_spec)
+            aux_total = auxs.sum()
+        else:
+            def block(x, xs):
+                lp, lc = xs
+                x, nc, aux = _jamba_period(
+                    lp, cfg, x, positions=positions, caches=lc,
+                    cache_index=cache_index, window=window)
+                return x, (nc, aux)
+            x, (new_caches, auxs) = jax.lax.scan(
+                block, x, (params["periods"], caches))
+            aux_total = auxs.sum()
+
+    elif cfg.family == "ssm":
+        def block(x, xs):
+            lp, lc = xs
+            x, nc, aux = _ssm_layer(lp, cfg, x, cache=lc)
+            return x, nc
+
+        if caches is None:
+            def tblock(x, lp):
+                x, _, _ = _ssm_layer(lp, cfg, x, cache=None)
+                return x, jnp.zeros((), jnp.float32)
+            x, _ = scan_layers_remat(tblock, x, params["layers"], remat,
+                                     layer_specs=layer_specs,
+                                     act_spec=act_spec)
+        else:
+            x, new_caches = jax.lax.scan(block, x, (params["layers"], caches))
+
+    elif cfg.family == "encdec":
+        memory = batch.get("enc_memory")
+        if memory is None:
+            memory = _run_encoder(params, cfg, batch["enc_embeds"], remat)
+
+        def block(x, xs):
+            lp, lc = xs
+            h = layer_norm(x, lp["ln1"], lp["ln1b"], cfg.norm_eps)
+            out, nc = gqa_forward(lp["attn"], cfg, h, positions=positions,
+                                  causal=True, cache=lc,
+                                  cache_index=cache_index)
+            x = x + out
+            h = layer_norm(x, lp["lnx"], lp["lnxb"], cfg.norm_eps)
+            x = x + cross_forward(lp["cross"], cfg, h, memory)
+            h = layer_norm(x, lp["ln2"], lp["ln2b"], cfg.norm_eps)
+            x = x + gelu_mlp(h, lp["mlp"]["w_in"], lp["mlp"]["b_in"],
+                             lp["mlp"]["w_out"], lp["mlp"]["b_out"])
+            return x, nc
+
+        if caches is None:
+            def tblock(x, lp):
+                x, _ = block(x, (lp, None))
+                return x, jnp.zeros((), jnp.float32)
+            x, _ = scan_layers_remat(tblock, x, params["layers"], remat,
+                                     layer_specs=layer_specs,
+                                     act_spec=act_spec)
+        else:
+            x, new_caches = jax.lax.scan(block, x, (params["layers"], caches))
+
+    else:  # dense / moe / vlm
+        first_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+        layer0_cache = None
+        if first_dense:
+            dense_cfg = dataclasses.replace(cfg, moe=None)
+            lc0 = None if caches is None else caches["layer0"]
+            x, layer0_cache, _ = _dense_layer(
+                params["layer0"], dense_cfg, x, positions=positions,
+                mrope_positions=mrope_positions, cache=lc0,
+                cache_index=cache_index, window=window)
+
+        def block(x, xs):
+            lp, lc = xs
+            x, nc, aux = _dense_layer(
+                lp, cfg, x, positions=positions,
+                mrope_positions=mrope_positions, cache=lc,
+                cache_index=cache_index, window=window)
+            return x, (nc, aux)
+
+        if caches is None:
+            def tblock(x, lp):
+                x, _, aux = _dense_layer(
+                    lp, cfg, x, positions=positions,
+                    mrope_positions=mrope_positions, cache=None,
+                    cache_index=None, window=window)
+                return x, aux
+            x, auxs = scan_layers_remat(tblock, x, params["layers"], remat,
+                                        layer_specs=layer_specs,
+                                        act_spec=act_spec)
+            aux_total = auxs.sum()
+        else:
+            stack_caches = caches["layers"] if first_dense else caches
+            x, (nc, auxs) = jax.lax.scan(block, x, (params["layers"], stack_caches))
+            aux_total = auxs.sum()
+            new_caches = {"layer0": layer0_cache, "layers": nc} if first_dense else nc
+
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+    if last_only:
+        x = x[:, -1:, :]
+    if cfg.family == "encdec":
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"],
+                       cfg.norm_eps)
+    else:
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    return logits, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    """Pytree of (shape, dtype) describing the decode cache."""
+    hd, Hkv = cfg.hd, cfg.num_kv_heads
+
+    def attn_spec():
+        dt = cfg.param_dtype()
+        return {
+            "k": ((batch, max_len, Hkv, hd), dt),
+            "v": ((batch, max_len, Hkv, hd), dt),
+        }
+
+    if cfg.family == "hybrid":
+        n_periods = cfg.num_layers // cfg.hybrid.period
+        n_mamba = cfg.hybrid.period - 1
+        m = mamba1_cache_spec(cfg, batch)
+        return {
+            "attn": {k: ((n_periods, *s), d) for k, (s, d) in attn_spec().items()},
+            "mamba": {k: ((n_periods, n_mamba, *s), d) for k, (s, d) in m.items()},
+        }
+    if cfg.family == "ssm":
+        m = mamba2_cache_spec(cfg, batch)
+        return {k: ((cfg.num_layers, *s), d) for k, (s, d) in m.items()}
+    if cfg.mla:
+        lora = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+        spec = {"latent": ((batch, max_len, lora), cfg.param_dtype())}
+        first_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+        stacked = {k: ((cfg.num_layers - first_dense, *s), d)
+                   for k, (s, d) in spec.items()}
+        if first_dense:
+            return {"layer0": spec, "layers": stacked}
+        return stacked
+    if cfg.family == "encdec":
+        # cross-attn K/V are recomputed from enc_memory each step (memory is
+        # an input to serve_step); only decoder self-attn KV is cached.
+        return {k: ((cfg.num_layers, *s), d) for k, (s, d) in attn_spec().items()}
+    return {k: ((cfg.num_layers, *s), d) for k, (s, d) in attn_spec().items()}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd[0], sd[1]), cache_specs(cfg, batch, max_len),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+    )

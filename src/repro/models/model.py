@@ -1,0 +1,111 @@
+"""Public model API used by train/serve steps, examples, and the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .lm import RematPolicy, cache_specs, init_cache, init_lm, lm_forward
+
+
+@jax.custom_vjp
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE (f32 math, bf16-resident).  logits: (B,S,V) bf16;
+    labels: (B,S) int32.
+
+    custom_vjp keeps the saved residual AND the logits cotangent in the
+    logits dtype: the default AD path materializes 3-4 f32 copies of the
+    (tokens, vocab) tensor (12 GiB/device at 49k vocab), which dominated
+    the train-step memory roofline.  See EXPERIMENTS.md §Perf iteration 1.
+    """
+    loss, _ = _ce_fwd(logits, labels)
+    return loss
+
+
+def _ce_stats(logits, labels):
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    sumexp = jnp.sum(jnp.exp(lf - m), axis=-1)
+    lse = m[..., 0] + jnp.log(sumexp)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse, ll, m[..., 0], sumexp
+
+
+def _ce_fwd(logits, labels):
+    lse, ll, m, sumexp = _ce_stats(logits, labels)
+    loss = jnp.mean(lse - ll)
+    return loss, (logits, labels, m, sumexp)
+
+
+def _ce_bwd(res, g):
+    logits, labels, m, sumexp = res
+    lf = logits.astype(jnp.float32)
+    p = jnp.exp(lf - m[..., None]) / sumexp[..., None]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    n_tokens = labels.size
+    dlogits = ((g / n_tokens) * (p - onehot)).astype(logits.dtype)
+    return dlogits, None
+
+
+cross_entropy.defvjp(_ce_fwd, _ce_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    remat: RematPolicy = RematPolicy()
+    moe_aux_weight: float = 0.01
+    # FSDP per-layer unshard specs for the scanned stack (see
+    # lm.scan_layers_remat); None = no constraint.
+    layer_specs: object = None
+    # PartitionSpec pinning the residual stream (batch-sharded) at every
+    # scanned block entry; None = let XLA propagate.
+    act_spec: object = None
+
+    # -- parameters --------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        return init_lm(self.cfg, key)
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        logits, _, aux = lm_forward(params, self.cfg, batch, remat=self.remat,
+                                    layer_specs=self.layer_specs,
+                                    act_spec=self.act_spec)
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce + self.moe_aux_weight * aux
+        return loss, {"ce": ce, "moe_aux": aux}
+
+    # -- inference ---------------------------------------------------------
+    def prefill(self, params: dict, batch: dict, *, last_only: bool = False) -> jax.Array:
+        """Full-sequence forward, returns logits (B, S, V) — or (B, 1, V)
+        with last_only (serving: only the next-token distribution is
+        needed, skipping the (tokens x vocab) unembed)."""
+        logits, _, _ = lm_forward(
+            params, self.cfg, batch, remat=RematPolicy(enabled=False),
+            last_only=last_only)
+        return logits
+
+    def decode_step(
+        self, params: dict, caches: Any, batch: dict,
+        cache_index: jax.Array, *, window: Optional[int] = None,
+    ) -> tuple[jax.Array, Any]:
+        """One decode step.  batch["tokens"]: (B, 1).  Returns (logits
+        (B, 1, V), updated caches)."""
+        win = window
+        if win is None and self.cfg.sliding_window:
+            win = self.cfg.sliding_window
+        logits, new_caches, _ = lm_forward(
+            params, self.cfg, batch, caches=caches, cache_index=cache_index,
+            remat=RematPolicy(enabled=False), window_override=win or 0)
+        return logits, new_caches
+
+    # -- caches --------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int):
+        return cache_specs(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int):
+        return init_cache(self.cfg, batch, max_len)

@@ -1,0 +1,291 @@
+"""State-space layers: Mamba-2 SSD (chunked, for mamba2-1.3b) and Mamba-1
+selective scan (for jamba), each with a train/prefill form and an O(1)
+decode step.
+
+Projections are kept as SEPARATE weights (w_z / w_x / w_B / w_C / w_dt)
+rather than one packed in_proj: the packed layout cannot be tensor-
+parallel-sharded without cutting across components, while the unpacked
+form shards cleanly — d_inner (and SSD heads) over 'model', B/C/dt small
+and replicated, out_proj row-parallel with the usual all-reduce.
+
+SSD chunked algorithm (Dao & Gu 2024): split the sequence into chunks of
+Q tokens; within a chunk the recurrence is a masked quadratic form
+(MXU-friendly); across chunks a small (H, d_state, head_dim) state is
+carried by a scan.  All decays are exp(negative cumsums) so everything
+stays <= 1.  kernels/ssd is the Pallas version of the intra-chunk part;
+this module is the XLA twin + oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import InitCtx, rms_norm
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq.  x: (B, S, C); w: (K, C); b: (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(xp[:, k : k + S, :] * w[k] for k in range(K))
+    return out + b
+
+
+def _conv_step(state: jax.Array, x_t: jax.Array, w: jax.Array,
+               b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-token conv.  state: (B, K-1, C) last inputs; x_t: (B, 1, C)."""
+    window = jnp.concatenate([state, x_t], axis=1)        # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return window[:, 1:, :], y[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(ctx: InitCtx, cfg: ArchConfig, prefix: str) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner = s.expand * D
+    H = d_inner // s.head_dim
+    N = s.d_state
+    return {
+        "w_z": ctx.make(f"{prefix}.w_z", (D, d_inner)),
+        "w_x": ctx.make(f"{prefix}.w_x", (D, d_inner)),
+        "w_B": ctx.make(f"{prefix}.w_B", (D, N)),
+        "w_C": ctx.make(f"{prefix}.w_C", (D, N)),
+        "w_dt": ctx.make(f"{prefix}.w_dt", (D, H)),
+        "conv_x_w": ctx.make(f"{prefix}.conv_x_w", (s.d_conv, d_inner), scale=0.3),
+        "conv_x_b": ctx.make(f"{prefix}.conv_x_b", (d_inner,), zero=True),
+        "conv_B_w": ctx.make(f"{prefix}.conv_B_w", (s.d_conv, N), scale=0.3),
+        "conv_B_b": ctx.make(f"{prefix}.conv_B_b", (N,), zero=True),
+        "conv_C_w": ctx.make(f"{prefix}.conv_C_w", (s.d_conv, N), scale=0.3),
+        "conv_C_b": ctx.make(f"{prefix}.conv_C_b", (N,), zero=True),
+        "A_log": ctx.const(f"{prefix}.A_log",
+                           jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32)),
+        "D": ctx.const(f"{prefix}.D", jnp.ones((H,), jnp.float32)),
+        "dt_bias": ctx.const(f"{prefix}.dt_bias", jnp.zeros((H,), jnp.float32)),
+        "norm": ctx.make(f"{prefix}.norm", (d_inner,), scale="embed"),
+        "out_proj": ctx.make(f"{prefix}.out_proj", (d_inner, D)),
+    }
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int, state_in=None):
+    """SSD scan.  x: (B, S, H, hd); dt: (B, S, H); A: (H,) negative;
+    Bm/Cm: (B, S, N).  Returns (y: (B,S,H,hd), state_out: (B,H,N,hd))."""
+    Bsz, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, hd)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    a = dtc * A  # (B,nc,Q,H), negative
+    cum = jnp.cumsum(a, axis=2)
+    # intra-chunk quadratic form.  Mask the exponent BEFORE exp: above the
+    # diagonal cum_i - cum_j > 0 and exp overflows to inf, whose masked-out
+    # cotangent is 0 * inf = NaN (see tests/test_models.py::test_ssd_grads).
+    dcum = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], dcum, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    w = scores[..., None] * Lmat * dtc[:, :, None, :, :]           # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", w.astype(x.dtype), xc)
+
+    # chunk-local states and inter-chunk scan
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nc,Q,H)
+    Sloc = jnp.einsum("bcjn,bcjh,bcjhd->bchnd",
+                      Bc.astype(jnp.float32), (dtc * decay_to_end),
+                      xc.astype(jnp.float32))                      # (B,nc,H,N,hd)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # (B,nc,H)
+
+    def step(S_carry, inp):
+        Sloc_c, dec_c = inp
+        S_new = dec_c[..., None, None] * S_carry + Sloc_c
+        return S_new, S_carry                                      # emit state BEFORE chunk
+
+    S0 = (jnp.zeros((Bsz, H, N, hd), jnp.float32) if state_in is None
+          else state_in.astype(jnp.float32))
+    S_out, states_prev = jax.lax.scan(
+        step, S0,
+        (Sloc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    states_prev = states_prev.transpose(1, 0, 2, 3, 4)             # (B,nc,H,N,hd)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnd->bcihd",
+                         Cc.astype(jnp.float32), jnp.exp(cum), states_prev)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, Sp, H, hd)
+    if pad:
+        y = y[:, :S]
+    return y.astype(x.dtype), S_out
+
+
+def mamba2_forward(p: dict, cfg: ArchConfig, xin: jax.Array, *,
+                   cache: dict | None = None):
+    """xin: (B, S, D).  cache (decode): {"conv_x","conv_B","conv_C","state"}."""
+    s = cfg.ssm
+    B, S, D = xin.shape
+    d_inner = s.expand * D
+    H = d_inner // s.head_dim
+
+    z = jnp.einsum("bsd,di->bsi", xin, p["w_z"])
+    x_raw = jnp.einsum("bsd,di->bsi", xin, p["w_x"])
+    B_raw = jnp.einsum("bsd,dn->bsn", xin, p["w_B"])
+    C_raw = jnp.einsum("bsd,dn->bsn", xin, p["w_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xin, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])                                             # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+
+    new_cache = None
+    if cache is None:
+        xs = jax.nn.silu(_causal_conv(x_raw, p["conv_x_w"], p["conv_x_b"]))
+        Bm = jax.nn.silu(_causal_conv(B_raw, p["conv_B_w"], p["conv_B_b"]))
+        Cm = jax.nn.silu(_causal_conv(C_raw, p["conv_C_w"], p["conv_C_b"]))
+        xh = xs.reshape(B, S, H, s.head_dim)
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk=s.chunk)
+    else:
+        cx, yx = _conv_step(cache["conv_x"], x_raw, p["conv_x_w"], p["conv_x_b"])
+        cB, yB = _conv_step(cache["conv_B"], B_raw, p["conv_B_w"], p["conv_B_b"])
+        cC, yC = _conv_step(cache["conv_C"], C_raw, p["conv_C_w"], p["conv_C_b"])
+        xs, Bm, Cm = jax.nn.silu(yx), jax.nn.silu(yB), jax.nn.silu(yC)
+        xh = xs.reshape(B, 1, H, s.head_dim)
+        dec = jnp.exp(dt[:, 0] * A)                                 # (B,H)
+        upd = jnp.einsum("bh,bn,bhd->bhnd", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        state = dec[..., None, None] * cache["state"] + upd
+        y = jnp.einsum("bn,bhnd->bhd", Cm[:, 0].astype(jnp.float32), state)
+        y = y[:, None].astype(xin.dtype)                            # (B,1,H,hd)
+        new_cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": state}
+
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_cache
+
+
+def mamba2_cache_spec(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    dt = cfg.param_dtype()
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return {
+        "conv_x": ((batch, s.d_conv - 1, d_inner), dt),
+        "conv_B": ((batch, s.d_conv - 1, s.d_state), dt),
+        "conv_C": ((batch, s.d_conv - 1, s.d_state), dt),
+        "state": ((batch, H, s.d_state, s.head_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective scan; jamba layers)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(ctx: InitCtx, cfg: ArchConfig, prefix: str) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner = s.expand * D
+    N = s.d_state
+    dt_rank = math.ceil(D / 16)
+    return {
+        "w_x": ctx.make(f"{prefix}.w_x", (D, d_inner)),
+        "w_z": ctx.make(f"{prefix}.w_z", (D, d_inner)),
+        "conv_w": ctx.make(f"{prefix}.conv_w", (s.d_conv, d_inner), scale=0.3),
+        "conv_b": ctx.make(f"{prefix}.conv_b", (d_inner,), zero=True),
+        "x_proj": ctx.make(f"{prefix}.x_proj", (d_inner, dt_rank + 2 * N)),
+        "dt_proj": ctx.make(f"{prefix}.dt_proj", (dt_rank, d_inner)),
+        "dt_bias": ctx.const(f"{prefix}.dt_bias", jnp.zeros((d_inner,), jnp.float32)),
+        "A_log": ctx.const(
+            f"{prefix}.A_log",
+            jnp.broadcast_to(
+                jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), (d_inner, N)
+            ).copy(),
+        ),
+        "D": ctx.const(f"{prefix}.D", jnp.ones((d_inner,), jnp.float32)),
+        "out_proj": ctx.make(f"{prefix}.out_proj", (d_inner, D)),
+    }
+
+
+def mamba1_forward(p: dict, cfg: ArchConfig, xin: jax.Array, *,
+                   cache: dict | None = None):
+    """xin: (B, S, D).  cache: {"conv": (B,K-1,d_inner), "state": (B,d_inner,N)}."""
+    s = cfg.ssm
+    B, S, D = xin.shape
+    d_inner = s.expand * D
+    N = s.d_state
+    dt_rank = p["dt_proj"].shape[0]
+
+    x = jnp.einsum("bsd,di->bsi", xin, p["w_x"])
+    z = jnp.einsum("bsd,di->bsi", xin, p["w_z"])
+
+    new_cache = None
+    if cache is None:
+        x = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"]))
+    else:
+        conv_state, y_conv = _conv_step(cache["conv"], x, p["conv_w"], p["conv_b"])
+        x = jax.nn.silu(y_conv)
+
+    dbc = jnp.einsum("bsi,ik->bsk", x, p["x_proj"])
+    dt_low, Bm, Cm = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_low, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )                                                              # (B,S,d_inner)
+    A = -jnp.exp(p["A_log"])                                       # (d_inner,N)
+
+    if cache is None:
+        # scan over time; carry h: (B, d_inner, N) f32
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp                              # (B,di),(B,di),(B,N),(B,N)
+            dA = jnp.exp(dt_t[..., None] * A)                      # (B,di,N)
+            dBx = dt_t[..., None] * B_t[:, None, :].astype(jnp.float32) \
+                * x_t[..., None].astype(jnp.float32)
+            h = dA * h + dBx
+            y_t = jnp.einsum("bin,bn->bi", h, C_t.astype(jnp.float32))
+            return h, y_t
+
+        h0 = jnp.zeros((B, d_inner, N), jnp.float32)
+        xs = (x.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+              Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+        _, ys = jax.lax.scan(step, h0, xs)
+        y = ys.transpose(1, 0, 2)                                  # (B,S,d_inner)
+    else:
+        dA = jnp.exp(dt[:, 0, :, None] * A)
+        dBx = dt[:, 0, :, None] * Bm[:, 0, None, :].astype(jnp.float32) \
+            * x[:, 0, :, None].astype(jnp.float32)
+        h_final = dA * cache["state"] + dBx
+        y = jnp.einsum("bin,bn->bi", h_final, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"conv": conv_state, "state": h_final}
+
+    y = y.astype(xin.dtype) + p["D"].astype(xin.dtype) * x
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_cache
+
+
+def mamba1_cache_spec(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    return {
+        "conv": ((batch, s.d_conv - 1, d_inner), cfg.param_dtype()),
+        "state": ((batch, d_inner, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,1 @@
+from .sharding import param_specs, batch_specs, cache_partition_specs, to_shardings

@@ -1,0 +1,208 @@
+"""Sharding rules: parameter PartitionSpecs by leaf path, activation and
+cache specs, with divisibility guards.
+
+Baseline layout (paper-faithful "what a production mesh does"):
+  * batch over ('pod', 'data')
+  * tensor parallel over 'model': attention heads (packed H*hd dim), FFN
+    hidden, MoE expert FFN width, SSM d_inner/heads, vocab (where divisible)
+  * optional FSDP: large weight leaves additionally sharded over 'data'
+    on a non-model dim (ZeRO-3 via pjit shardings; XLA inserts the
+    all-gathers)
+
+Every 'model' assignment is guarded by divisibility: if a dim does not
+divide by the axis size the dim is left unsharded (e.g. whisper's 20
+heads, granite's 49155 vocab).  This keeps every (arch x mesh) cell
+compilable without per-arch special cases.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> (negative dim index to shard over 'model')
+# indexes are from the END of the shape so stacked layer axes don't matter.
+_MODEL_DIM_RULES: dict[str, int] = {
+    # attention
+    "wq": -1, "wk": -1, "wv": -1, "wo": -2,
+    "bq": -1, "bk": -1, "bv": -1,
+    # mlp
+    "w_gate": -1, "w_up": -1, "w_down": -2,
+    "w_in": -1, "b_in": -1, "w_out": -2,
+    # mla
+    "w_uk": -1, "w_uv": -1,
+    # ssm (unpacked projections)
+    "w_z": -1, "w_x": -1, "w_dt": -1,
+    "conv_x_w": -1, "conv_x_b": -1, "conv_w": -1, "conv_b": -1,
+    "x_proj": -2, "dt_proj": -1, "A_log": -1, "dt_bias": -1,
+    "out_proj": -2, "norm": -1,
+    # embeddings
+    "embed": -2, "lm_head": -1,
+}
+# mamba1 A_log is (d_inner, N) -> shard -2; mamba2 A_log is (H,) -> -1.
+# Disambiguated by rank at application time (see _model_dim).
+
+_REPLICATED = {"router", "w_dkv", "kv_norm", "w_B", "w_C", "conv_B_w",
+               "conv_B_b", "conv_C_w", "conv_C_b", "D",
+               "ln1", "ln2", "ln", "ln1b", "ln2b", "lnx", "lnxb",
+               "final_norm", "final_norm_b", "enc_final_norm_b", "efnb", "fnb",
+               "b_out"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _model_dim(name: str, shape: tuple[int, ...]) -> int | None:
+    if name == "A_log":
+        return -2 if len(shape) >= 2 and shape[-1] <= 256 and shape[-2] > shape[-1] \
+            else -1
+    if name == "D" or name == "dt_bias":
+        return -1
+    return _MODEL_DIM_RULES.get(name)
+
+
+def param_specs(
+    params: Any,
+    *,
+    model_axis: str = "model",
+    model_size: int,
+    fsdp_axis: str | None = None,
+    fsdp_size: int = 1,
+    fsdp_min_size: int = 1 << 22,
+    attention_shardable: bool = True,
+) -> Any:
+    """PartitionSpec pytree matching ``params``.
+
+    attention_shardable=False replicates attention projections (whisper:
+    20 heads don't divide the model axis, and sharding the packed dim
+    would split heads across shards)."""
+
+    def spec_for(path, leaf) -> P:
+        name = _leaf_name(path)
+        shape = leaf.shape
+        ndim = len(shape)
+        dims: list[Any] = [None] * ndim
+        if name in _REPLICATED or ndim == 0:
+            return P(*dims)
+        md = _model_dim(name, shape)
+        if name in ("wq", "wk", "wv", "wo", "bq", "bk", "bv") and not attention_shardable:
+            md = None
+        if name == "A_log" and ndim == 1:
+            md = -1
+        if md is not None and shape[md] % model_size == 0:
+            dims[md] = model_axis
+        # FSDP: shard the largest remaining dim of big leaves over data
+        if fsdp_axis and leaf.size >= fsdp_min_size:
+            cands = [
+                d for d in range(ndim)
+                if dims[d] is None and shape[d] % fsdp_size == 0 and shape[d] > 1
+            ]
+            if cands:
+                best = max(cands, key=lambda d: shape[d])
+                dims[best] = fsdp_axis
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_specs(batch_axes: tuple[str, ...] = ("pod", "data")) -> dict[str, P]:
+    """Input specs by batch-entry name; batch dim over pod+data."""
+    b = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    return {
+        "tokens": P(b, None),
+        "labels": P(b, None),
+        "embeds": P(b, None, None),
+        "enc_embeds": P(b, None, None),
+        "enc_memory": P(b, None, None),
+        "mrope_positions": P(None, b, None),
+    }
+
+
+def cache_partition_specs(
+    cache_spec_tree: Any,
+    *,
+    batch_axes: tuple[str, ...] = ("pod", "data"),
+    model_axis: str = "model",
+    model_size: int = 1,
+    global_batch: int = 0,
+    batch_size_total: int = 1,
+    seq_axis_for_b1: bool = True,
+) -> Any:
+    """PartitionSpecs for decode caches.
+
+    Layout per leaf kind (leaves carry a leading stacked-layer axis):
+      * attention k/v (L, B, S, Hkv, hd): B over batch axes, Hkv over
+        'model' when divisible; if B == 1 (long-context), S over batch
+        axes instead (context parallelism).
+      * mla latent (L, B, S, R): B over batch axes (R too small to split).
+      * ssm conv/state: B over batch axes, d_inner/H over 'model' when
+        divisible.
+    """
+    b = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def spec_for(path, leaf):
+        shape, _ = leaf  # (shape, dtype) tuples
+        name = _leaf_name(path)
+        ndim = len(shape)
+        dims: list[Any] = [None] * ndim
+        # Attention caches are CONTEXT-PARALLEL: S over 'model' (softmax
+        # partials reduce with tiny (B,H,1) all-reduces), B over the batch
+        # axes.  Sharding Hkv over 'model' (or leaving the cache
+        # replicated) makes XLA reassemble the full stacked cache per
+        # step — 35 GiB/token of all-gather on granite decode_32k before
+        # this layout (EXPERIMENTS.md §Perf decode iteration).
+        if name in ("k", "v"):
+            B_dim, S_dim = ndim - 4, ndim - 3
+            if shape[B_dim] == 1 and seq_axis_for_b1:
+                both = (*batch_axes, model_axis)
+                if shape[S_dim] % (batch_size_total * model_size) == 0:
+                    dims[S_dim] = both
+                elif shape[S_dim] % model_size == 0:
+                    dims[S_dim] = model_axis
+            else:
+                if shape[B_dim] % batch_size_total == 0:
+                    dims[B_dim] = b
+                if shape[S_dim] % model_size == 0:
+                    dims[S_dim] = model_axis
+        elif name == "latent":
+            B_dim, S_dim = ndim - 3, ndim - 2
+            if shape[B_dim] % batch_size_total == 0:
+                dims[B_dim] = b
+            if shape[S_dim] % model_size == 0:
+                dims[S_dim] = model_axis
+        elif name.startswith("conv"):
+            B_dim, C_dim = ndim - 3, ndim - 1
+            if shape[B_dim] % batch_size_total == 0:
+                dims[B_dim] = b
+            if shape[C_dim] % model_size == 0 and shape[C_dim] >= model_size * 16:
+                dims[C_dim] = model_axis
+        elif name == "state":
+            keys = [str(e.key) for e in path if hasattr(e, "key")]
+            if "mamba" in keys:   # jamba mamba1: (..., B, d_inner, N)
+                B_dim, H_dim = ndim - 3, ndim - 2
+            else:                 # mamba2 SSD: (..., B, H, N, hd)
+                B_dim, H_dim = ndim - 4, ndim - 3
+            if shape[B_dim] % batch_size_total == 0:
+                dims[B_dim] = b
+            if shape[H_dim] % model_size == 0:
+                dims[H_dim] = model_axis
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, cache_spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple),
+    )
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,60 @@
+"""Batched serving: prefill + decode loop with a step-indexed KV cache.
+
+The jitted ``serve_step`` is the function the decode_* dry-run cells
+lower: one new token against a cache of ``seq_len`` (cache donated, so
+the update is in-place on device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    batch_size: int
+    max_len: int
+
+    def __post_init__(self):
+        self._decode = jax.jit(
+            lambda p, c, b, i: self.model.decode_step(p, c, b, i),
+            donate_argnums=(1,),
+        )
+
+    def init_cache(self):
+        return self.model.init_cache(self.batch_size, self.max_len)
+
+    def prefill_logits(self, params, batch) -> jax.Array:
+        return jax.jit(self.model.prefill)(params, batch)
+
+    def generate(self, params, prompt_tokens: jax.Array, steps: int,
+                 *, extra_batch: dict | None = None,
+                 temperature: float = 0.0, key=None) -> jax.Array:
+        """Greedy/sampled generation.  prompt_tokens: (B, S0) int32.
+        Feeds the prompt token-by-token through decode (cache-exact),
+        then generates ``steps`` tokens."""
+        B, S0 = prompt_tokens.shape
+        cache = self.init_cache()
+        out = [prompt_tokens]
+        tok = None
+        extra = extra_batch or {}
+        for i in range(S0 + steps - 1):
+            cur = prompt_tokens[:, i : i + 1] if i < S0 else tok
+            logits, cache = self._decode(
+                params, cache, {"tokens": cur, **extra}, jnp.int32(i))
+            if temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            if i >= S0 - 1:
+                out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, schedule, global_norm
+from .step import TrainConfig, make_train_step, init_train_state

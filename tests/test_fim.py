@@ -1,0 +1,112 @@
+"""Property tests for the Flow Imbalance Metric (paper eq. 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fabric import Device, Fabric, Link, SERVER, LEAF
+from repro.core.fim import fim, link_flow_counts, max_min_throughput, per_layer_fim
+
+
+def _line_fabric(n_links: int) -> Fabric:
+    """One layer of n parallel links between two devices."""
+    devices = [Device("a", LEAF), Device("b", SERVER)]
+    links = [Link("a", f"p{i}", "b", f"q{i}", 100.0, "layer") for i in range(n_links)]
+    return Fabric(devices, links)
+
+
+def _paths_from_counts(fab: Fabric, counts: list[int]):
+    paths = {}
+    fid = 0
+    for link, c in zip(fab.links, counts):
+        for _ in range(c):
+            paths[fid] = [link]
+            fid += 1
+    return paths
+
+
+@given(st.lists(st.integers(0, 50), min_size=2, max_size=32))
+@settings(max_examples=200, deadline=None)
+def test_fim_matches_mape_formula(counts):
+    if sum(counts) == 0:
+        return
+    fab = _line_fabric(len(counts))
+    paths = _paths_from_counts(fab, counts)
+    n = len(counts)
+    ideal = sum(counts) / n
+    expected = 100.0 / n * sum(abs(c - ideal) / ideal for c in counts)
+    assert fim(paths, fab) == pytest.approx(expected, rel=1e-9)
+
+
+@given(st.integers(1, 20), st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_fim_zero_iff_balanced(per_link, n_links):
+    fab = _line_fabric(n_links)
+    paths = _paths_from_counts(fab, [per_link] * n_links)
+    assert fim(paths, fab) == pytest.approx(0.0, abs=1e-12)
+
+
+@given(st.lists(st.integers(0, 20), min_size=2, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_fim_nonnegative_and_permutation_invariant(counts):
+    if sum(counts) == 0:
+        return
+    fab = _line_fabric(len(counts))
+    f1 = fim(_paths_from_counts(fab, counts), fab)
+    rng = np.random.default_rng(0)
+    perm = list(rng.permutation(counts))
+    f2 = fim(_paths_from_counts(fab, perm), fab)
+    assert f1 >= 0
+    assert f1 == pytest.approx(f2, rel=1e-9)
+
+
+@given(st.lists(st.integers(0, 10), min_size=2, max_size=12),
+       st.integers(2, 5))
+@settings(max_examples=100, deadline=None)
+def test_fim_scale_invariant(counts, k):
+    """k x the flows on every link -> identical FIM (it is a percentage)."""
+    if sum(counts) == 0:
+        return
+    fab = _line_fabric(len(counts))
+    f1 = fim(_paths_from_counts(fab, counts), fab)
+    f2 = fim(_paths_from_counts(fab, [c * k for c in counts]), fab)
+    assert f1 == pytest.approx(f2, rel=1e-9)
+
+
+def test_per_layer_drops_idle_layers():
+    fab = _line_fabric(4)
+    paths = _paths_from_counts(fab, [1, 1, 1, 1])
+    layers = per_layer_fim(paths, fab, layers=["layer", "nonexistent"])
+    assert list(layers) == ["layer"]
+
+
+# ---------------------------------------------------------------------------
+# max-min throughput model
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_throughput_equal_share_single_link(n_flows):
+    fab = _line_fabric(1)
+    paths = {i: [fab.links[0]] for i in range(n_flows)}
+    rates = max_min_throughput(paths)
+    for r in rates.values():
+        assert r == pytest.approx(100.0 / n_flows)
+
+
+@given(st.lists(st.integers(1, 8), min_size=2, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_throughput_conservation(counts):
+    """Sum of rates on each link never exceeds its capacity."""
+    fab = _line_fabric(len(counts))
+    paths = _paths_from_counts(fab, counts)
+    rates = max_min_throughput(paths)
+    per_link = {}
+    for fid, p in paths.items():
+        per_link.setdefault(p[0].name, 0.0)
+        per_link[p[0].name] += rates[fid]
+    for name, total in per_link.items():
+        assert total <= 100.0 + 1e-6
+        # max-min on a dedicated link also saturates it
+        assert total == pytest.approx(100.0)

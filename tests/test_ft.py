@@ -1,0 +1,122 @@
+"""Fault tolerance: elastic re-mesh planning, straggler detection,
+checkpoint/restart with injected failures."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import restore, save, latest_step
+from repro.configs import ARCHS
+from repro.data import SyntheticDataset
+from repro.ft import (
+    ElasticPlan, HostFailure, StragglerDetector, plan_elastic_mesh,
+    run_with_restarts,
+)
+from repro.models import Model
+from repro.train import AdamWConfig, TrainConfig, init_train_state, make_train_step
+
+
+@given(st.integers(16, 4096), st.sampled_from([4, 8, 16]))
+@settings(max_examples=100, deadline=None)
+def test_elastic_plan_properties(devices, tp):
+    if devices < tp:
+        return
+    plan = plan_elastic_mesh(devices, model_parallel=tp)
+    used = plan.mesh_shape[0] * plan.mesh_shape[1]
+    assert plan.mesh_shape[1] == tp          # TP degree preserved
+    assert used + plan.dropped_devices == devices
+    assert plan.dropped_devices < tp         # drop less than one TP group
+
+
+def test_elastic_plan_preserves_global_batch():
+    plan = plan_elastic_mesh(12 * 16, model_parallel=16, prefer_data=16)
+    assert plan.mesh_shape == (12, 16)
+    assert plan.grad_accum_multiplier == 2   # 16/12 -> ceil = 2
+
+
+def test_elastic_rejects_undersized():
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, model_parallel=16)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(threshold=1.5, min_samples=3)
+    for step in range(6):
+        for h in range(8):
+            t = 1.0 if h != 3 else 2.5       # host 3 is slow
+            det.record(f"host-{h}", t + 0.01 * step)
+    reports = det.check()
+    assert len(reports) == 1
+    assert reports[0].host == "host-3"
+    assert reports[0].advice in ("trace-paths", "rebalance", "evict")
+
+
+def test_straggler_needs_samples():
+    det = StragglerDetector(min_samples=3)
+    det.record("a", 1.0)
+    det.record("b", 9.0)
+    assert det.check() == []
+
+
+def test_run_with_restarts_resumes_from_checkpoint():
+    """Simulated host failure mid-training: the loop restores the latest
+    checkpoint and completes with the exact same final state as an
+    uninterrupted run (step-indexed data pipeline)."""
+    cfg = ARCHS["granite-3-2b"].reduced()
+    model = Model(cfg)
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3))
+    ds = SyntheticDataset(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=3)
+    step = jax.jit(make_train_step(model, tc))
+    total = 6
+
+    def reference():
+        params, opt = init_train_state(model, tc, KEY := jax.random.PRNGKey(0))
+        for i in range(total):
+            batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+            params, opt, _ = step(params, opt, batch)
+        return params
+
+    with tempfile.TemporaryDirectory() as d:
+        state = {}
+
+        def train_loop(start_step: int) -> int:
+            if latest_step(d) is not None:
+                restored, s0 = restore(d, {"params": state["params"],
+                                           "opt": state["opt"]})
+                params, opt = restored["params"], restored["opt"]
+                start = s0
+            else:
+                params, opt = init_train_state(model, tc, jax.random.PRNGKey(0))
+                start = 0
+            for i in range(start, total):
+                batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+                params, opt, _ = step(params, opt, batch)
+                state["params"], state["opt"] = params, opt
+                save(d, i + 1, {"params": params, "opt": opt})
+                if i == 2 and not state.get("failed"):
+                    state["failed"] = True
+                    raise HostFailure("injected ICI timeout on host-7")
+            state["final"] = params
+            return total
+
+        run_with_restarts(train_loop, max_restarts=2)
+
+    ref = reference()
+    for a, b in zip(jax.tree.leaves(state["final"]), jax.tree.leaves(ref)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_restart_limit():
+    calls = {"n": 0}
+
+    def always_fails(start):
+        calls["n"] += 1
+        raise HostFailure("boom")
+
+    with pytest.raises(HostFailure):
+        run_with_restarts(always_fails, max_restarts=2)
+    assert calls["n"] == 3

@@ -1,0 +1,131 @@
+"""Compiled-HLO collective extraction: parsing, trip counts, flow
+decomposition conservation."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hlo_flows import (
+    collectives_to_flows, computation_multipliers, extract_collectives,
+    shape_bytes, summarize,
+)
+
+HLO = """
+HloModule jit_step
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], bf16[128,256])) -> (s32[], bf16[128,256]) {
+  %p = (s32[], bf16[128,256]) parameter(0)
+  %x = bf16[128,256] get-tuple-element(%p), index=1
+  %ar = bf16[128,256] all-reduce(%x), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, use_global_device_ids=true, to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], bf16[128,256]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], bf16[128,256])) -> pred[] {
+  %p = (s32[], bf16[128,256]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: bf16[128,256]) -> bf16[128,256] {
+  %a = bf16[128,256] parameter(0)
+  %ag = bf16[512,256] all-gather(%a), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %a2a = bf16[128,256] all-to-all(%a), channel_id=3, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %cp = bf16[128,256] collective-permute(%a), channel_id=4, source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %w = (s32[], bf16[128,256]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = bf16[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+AR_BYTES = 128 * 256 * 2       # bf16[128,256]
+AG_OUT = 512 * 256 * 2
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[128,256]{1,0}") == AR_BYTES
+    assert shape_bytes("f32[10]") == 40
+    assert shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert shape_bytes("pred[]") == 1
+
+
+def test_extract_and_trip_counts():
+    ops = extract_collectives(HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute"]
+    by_kind = {o.kind: o for o in ops}
+    ar = by_kind["all-reduce"]
+    assert ar.multiplier == 12, "while body trip count must be applied"
+    assert ar.groups == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert ar.wire_bytes == int(2 * 3 / 4 * AR_BYTES)
+    ag = by_kind["all-gather"]
+    assert ag.multiplier == 1
+    # iota [2,4]<=[8] -> {0..3},{4..7}
+    assert ag.groups == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert ag.wire_bytes == int(3 / 4 * AG_OUT)
+    cp = by_kind["collective-permute"]
+    assert cp.pairs == ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert cp.wire_bytes == AR_BYTES
+
+
+def test_multipliers_fixed_point():
+    mult = computation_multipliers(HLO)
+    assert mult["main"] == 1
+    assert mult["body"] == 12
+
+
+def test_summary_scales_by_multiplier():
+    ops = extract_collectives(HLO)
+    s = summarize(ops)
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert s.per_kind_wire["all-reduce"] == ar.wire_bytes * 12
+    assert s.per_kind_count["all-reduce"] == 12
+
+
+def test_iota_transpose_groups():
+    txt = ("ENTRY %m (a: f32[8]) -> f32[8] {\n"
+           "  ROOT %ar = f32[8] all-reduce(%a), channel_id=1, "
+           "replica_groups=[2,2]<=[2,2]T(1,0), to_apply=%add\n}")
+    ops = extract_collectives(txt)
+    # iota(4).reshape(2,2).T.reshape(2,2) -> groups {0,2},{1,3}
+    assert ops[0].groups == ((0, 2), (1, 3))
+
+
+def test_flow_decomposition_classes():
+    ops = extract_collectives(HLO)
+    # 8 devices = 2 hosts x 4 chips, single pod -> zero DCN flows
+    coords1 = {d: (0, d // 4, d % 4) for d in range(8)}
+    flows, stats = collectives_to_flows(ops, coords1)
+    assert len(flows) == 0 and stats.inter_pod_dcn == 0
+    # 8 devices = 2 pods x 1 host x 4 chips -> pod-crossing edges become flows
+    coords2 = {d: (d // 4, d // 4, d % 4) for d in range(8)}
+    flows2, stats2 = collectives_to_flows(ops, coords2)
+    assert stats2.inter_pod_dcn > 0
+    assert len(flows2) == stats2.inter_pod_dcn
+    assert all(f.bytes > 0 for f in flows2)
+    assert all(f.tuple5.dst_port == 4791 for f in flows2)  # RoCEv2
+
+
+@given(st.integers(2, 16), st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_ring_conservation(n, kb):
+    """Ring all-reduce: n edges x 2(n-1)/n*B bytes each; total wire over
+    the group = 2(n-1)B — the textbook ring bound."""
+    bytes_ = kb * 1024
+    group = ",".join(str(i) for i in range(n))
+    txt = (f"ENTRY %m (a: u8[{bytes_}]) -> u8[{bytes_}] {{\n"
+           f"  ROOT %ar = u8[{bytes_}] all-reduce(%a), channel_id=1, "
+           f"replica_groups={{{{{group}}}}}, to_apply=%add\n}}")
+    ops = extract_collectives(txt)
+    assert len(ops) == 1
+    op = ops[0]
+    coords = {i: (i, i, 0) for i in range(n)}  # every device its own pod
+    flows, stats = collectives_to_flows(ops, coords)
+    assert len(flows) == n                      # ring edges
+    per_edge = int(2 * (n - 1) / n * bytes_)
+    assert all(f.bytes == per_edge for f in flows)
+    assert op.wire_bytes == per_edge

@@ -1,0 +1,95 @@
+"""Algorithm 1: parallel path discovery — correctness & invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ADHOC, PERSISTENT, EcmpRouting, FlowTracer, LatencyModel, PairSpec,
+    WorkloadDescription, auto_processes, bipartite_pairs, build_paper_testbed,
+    nic_ip, server_name, synthesize_flows,
+)
+from repro.core.fabric import SERVER
+
+
+@pytest.fixture(scope="module")
+def setup():
+    fab = build_paper_testbed()
+    rack0 = [server_name(i) for i in range(8)]
+    rack1 = [server_name(8 + i) for i in range(8)]
+    wl = bipartite_pairs(rack0, rack1, flows_per_pair=8)
+    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
+    return fab, wl, flows
+
+
+def _names(paths):
+    return {k: [l.name for l in v] for k, v in paths.items()}
+
+
+def test_paths_are_topologically_valid(setup):
+    fab, wl, flows = setup
+    res = FlowTracer(fab, EcmpRouting(fab, seed=3), wl, flows).trace()
+    by_id = {f.flow_id: f for f in flows}
+    for fid, path in res.paths.items():
+        flow = by_id[fid]
+        assert path[0].src == flow.src
+        assert path[-1].dst == flow.dst
+        assert fab.kind(path[-1].dst) == SERVER
+        for a, b in zip(path, path[1:]):
+            assert a.dst == b.src, "links must chain through the topology"
+        # cross-rack: host->leaf->spine->leaf->host = 4 links
+        assert len(path) == 4
+
+
+@pytest.mark.parametrize("threads", [1, 2, 8])
+def test_thread_count_does_not_change_paths(setup, threads):
+    fab, wl, flows = setup
+    base = FlowTracer(fab, EcmpRouting(fab, seed=3), wl, flows).trace()
+    par = FlowTracer(fab, EcmpRouting(fab, seed=3), wl, flows,
+                     num_threads=threads).trace()
+    assert _names(base.paths) == _names(par.paths)
+
+
+def test_process_parallelism_matches_serial(setup):
+    fab, wl, flows = setup
+    base = FlowTracer(fab, EcmpRouting(fab, seed=3), wl, flows).trace()
+    par = FlowTracer(fab, EcmpRouting(fab, seed=3), wl, flows,
+                     num_processes=2, num_threads=2).trace()
+    assert _names(base.paths) == _names(par.paths)
+
+
+def test_connection_accounting(setup):
+    """Persistent SSH reuses channels; ad-hoc reconnects per query."""
+    fab, wl, flows = setup
+    adhoc = FlowTracer(fab, EcmpRouting(fab, seed=3), wl, flows,
+                       connection_mode=ADHOC).trace()
+    persist = FlowTracer(fab, EcmpRouting(fab, seed=3), wl, flows,
+                         connection_mode=PERSISTENT).trace()
+    assert adhoc.stats.queries == persist.stats.queries
+    assert adhoc.stats.connects == adhoc.stats.queries
+    assert persist.stats.connects < adhoc.stats.connects / 4
+
+
+def test_persistent_faster_with_latency(setup):
+    """Paper Fig. 5: connection setup dominates -> persistent wins."""
+    fab, wl, flows = setup
+    small = WorkloadDescription(pairs=wl.pairs[:2])
+    lat = LatencyModel(connect_s=0.003, query_s=0.0)
+    t_adhoc = FlowTracer(fab, EcmpRouting(fab, seed=3), small, flows,
+                         connection_mode=ADHOC, latency=lat).trace().wall_time_s
+    t_persist = FlowTracer(fab, EcmpRouting(fab, seed=3), small, flows,
+                           connection_mode=PERSISTENT, latency=lat).trace().wall_time_s
+    assert t_persist < t_adhoc
+
+
+def test_workload_filter_limits_tracing(setup):
+    fab, wl, flows = setup
+    one_pair = WorkloadDescription(pairs=[wl.pairs[0]])
+    res = FlowTracer(fab, EcmpRouting(fab, seed=3), one_pair, flows).trace()
+    assert len(res.paths) == 8  # only that pair's flows
+
+
+@given(st.integers(1, 40))
+@settings(max_examples=20, deadline=None)
+def test_auto_processes(n_pairs):
+    p = auto_processes(n_pairs)
+    assert 1 <= p <= min(8, n_pairs)
