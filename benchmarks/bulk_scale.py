@@ -1,29 +1,57 @@
 """FlowTracer-at-scale (beyond paper Section IV-B): the paper scales by
-adding processes/threads around per-flow SSH queries; our TPU-native
-answer is the flowhash kernel — the full flow table hashed in one
-vectorized pass.  1M flows x 4 ECMP stages + FIM in milliseconds."""
+adding processes/threads around per-flow SSH queries; our answer is the
+vectorized engine — the full flow table walked through the *general*
+compiled fabric in whole-array passes (core/vector_sim), with the
+flowhash Pallas kernel as the optional TPU hash backend.
+
+Two axes: flow count (single seed, big tables) and seed count (fixed
+table, Monte-Carlo sweeps, per-flow CRC pass amortized away)."""
 
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.kernels.flowhash.ops import link_loads_fim, simulate_paper_paths
-from .common import emit, timeit
+from repro.core import (
+    FIELDS_5TUPLE, build_paper_testbed, compile_fabric, flow_fields_matrix,
+    simulate_paths, fim_vector,
+)
+from .common import emit, paper_setup, timeit
+
+
+def _workload(total_flows: int):
+    # the canonical 2-rack workload has 16 directed PairSpecs
+    _, _, flows = paper_setup(flows_per_pair=total_flows // 16)
+    return flows
 
 
 def run() -> None:
-    rng = np.random.default_rng(1)
+    comp = compile_fabric(build_paper_testbed())
+
+    # axis 1: flow count at one seed
     for n in (10_000, 100_000, 1_000_000):
-        fields = jnp.asarray(rng.integers(0, 2**31, (n, 5)), jnp.uint32)
+        flows = _workload(n)
+        fields = flow_fields_matrix(flows, FIELDS_5TUPLE)
 
         def job():
-            ch = simulate_paper_paths(fields)
-            ch["uplink"].block_until_ready()
-            return ch
+            res = simulate_paths(comp, flows, [7], field_matrix=fields)
+            return fim_vector(res)
 
         t = timeit(job, repeats=3)
-        ch = job()
-        _, f = link_loads_fim(ch["uplink"], 16)
+        f = float(job()[0])
         emit(f"bulk_scale_{n}_flows", t * 1e6,
-             f"fim_uplinks={f:.2f}% flows_per_sec={n / t:.3g}")
+             f"fim={f:.2f}% flows_per_sec={n / t:.3g}")
+
+    # axis 2: seed count at the paper's 256-flow table
+    flows = _workload(256)
+    fields = flow_fields_matrix(flows, FIELDS_5TUPLE)
+    for s in (64, 1024, 8192):
+        seeds = np.arange(s)
+
+        def sweep():
+            res = simulate_paths(comp, flows, seeds, field_matrix=fields)
+            return fim_vector(res)
+
+        t = timeit(sweep, repeats=3)
+        fims = sweep()
+        emit(f"bulk_scale_{s}_seeds", t * 1e6,
+             f"fim_mean={fims.mean():.2f}% seeds_per_sec={s / t:.3g}")

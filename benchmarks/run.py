@@ -9,8 +9,8 @@ import sys
 
 from . import (
     bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
-    fig4_thread_scaling, fig5_connection_strategies, placement_ablation,
-    roofline, vxlan_entropy,
+    fig4_thread_scaling, fig5_connection_strategies, monte_carlo_fim,
+    placement_ablation, roofline, vxlan_entropy,
 )
 
 BENCHES = {
@@ -19,6 +19,7 @@ BENCHES = {
     "fig4": fig4_thread_scaling.run,
     "fig5": fig5_connection_strategies.run,
     "bulk_scale": bulk_scale.run,
+    "monte_carlo": monte_carlo_fim.run,
     "placement": placement_ablation.run,
     "vxlan": vxlan_entropy.run,
     "roofline": roofline.run,

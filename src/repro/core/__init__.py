@@ -17,7 +17,13 @@ from .flows import (
 )
 from .ecmp import (
     EcmpRouting, StaticRouting, RoutingPolicy, Forwarder, ecmp_hash,
+    device_seed, flow_hash_fields, flow_fields_matrix,
     FIELDS_5TUPLE, FIELDS_VXLAN, FIELDS_IP_PAIR,
+)
+from .compile_fabric import CompiledFabric, compile_fabric
+from .vector_sim import (
+    VectorTraceResult, MonteCarloFim, simulate_paths, fim_from_counts,
+    fim_vector, monte_carlo_fim,
 )
 from .fim import fim, per_layer_fim, link_flow_counts, max_min_throughput, per_pair_throughput
 from .tracer import (
@@ -41,7 +47,11 @@ __all__ = [
     "Flow", "FiveTuple", "PairSpec", "WorkloadDescription", "synthesize_flows",
     "bipartite_pairs",
     "EcmpRouting", "StaticRouting", "RoutingPolicy", "Forwarder", "ecmp_hash",
+    "device_seed", "flow_hash_fields", "flow_fields_matrix",
     "FIELDS_5TUPLE", "FIELDS_VXLAN", "FIELDS_IP_PAIR",
+    "CompiledFabric", "compile_fabric",
+    "VectorTraceResult", "MonteCarloFim", "simulate_paths", "fim_from_counts",
+    "fim_vector", "monte_carlo_fim",
     "fim", "per_layer_fim", "link_flow_counts", "max_min_throughput",
     "per_pair_throughput",
     "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",

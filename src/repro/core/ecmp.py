@@ -43,11 +43,22 @@ def _crc(s: str) -> int:
     return zlib.crc32(s.encode())
 
 
+HASH_INIT = 0x9E3779B97F4A7C15
+
+
 def ecmp_hash(fields: Sequence[int], seed: int) -> int:
-    h = _mix64(seed ^ 0x9E3779B97F4A7C15)
+    h = _mix64(seed ^ HASH_INIT)
     for f in fields:
         h = _mix64(h ^ (f & _MASK))
     return h
+
+
+def device_seed(device: str, seed: int) -> int:
+    """The effective per-switch hash seed: every device salts the shared
+    run seed with a stable digest of its own name (real switches differ in
+    per-ASIC seeds the same way — that is why collisions differ hop to
+    hop)."""
+    return _crc(device) ^ seed
 
 
 def flow_hash_fields(flow: Flow, mode: str) -> list[int]:
@@ -65,6 +76,18 @@ def flow_hash_fields(flow: Flow, mode: str) -> list[int]:
     if mode == FIELDS_IP_PAIR:
         return [_crc(t.src_ip), _crc(t.dst_ip)]
     raise ValueError(f"unknown hash-field mode: {mode}")
+
+
+def flow_fields_matrix(flows: Sequence[Flow], mode: str):
+    """Integer hash fields for many flows as a dense ``(N, F)`` uint64
+    array — the batched twin of ``flow_hash_fields`` (identical values),
+    consumed by ``vector_sim``.  Imported lazily so the tracer stays
+    numpy-free."""
+    import numpy as np
+
+    return np.array(
+        [flow_hash_fields(f, mode) for f in flows], np.uint64
+    ).reshape(len(flows), -1)
 
 
 # ---------------------------------------------------------------------------
@@ -159,8 +182,8 @@ class EcmpRouting(RoutingPolicy):
         cands = self.forwarder.candidates(device, flow)
         if len(cands) == 1:
             return cands[0]
-        dev_seed = _crc(device) ^ self.seed
-        h = ecmp_hash(flow_hash_fields(flow, self.fields), dev_seed)
+        h = ecmp_hash(flow_hash_fields(flow, self.fields),
+                      device_seed(device, self.seed))
         return cands[h % len(cands)]
 
 

@@ -72,12 +72,16 @@ def per_layer_fim(
 ) -> dict[str, tuple[float, int]]:
     """Per-layer (FIM, n_links).  Layers with zero traffic are dropped."""
     counts = link_flow_counts(paths)
+    used_devs: set[str] = set()
+    if only_used_leaves:
+        for p in paths.values():
+            for l in p:
+                used_devs.add(l.src)
+                used_devs.add(l.dst)
     out: dict[str, tuple[float, int]] = {}
     for layer in (layers or fabric.layers):
         links = fabric.links_by_layer(layer)
         if only_used_leaves:
-            used_devs = {l.src for p in paths.values() for l in p}
-            used_devs |= {l.dst for p in paths.values() for l in p}
             links = [l for l in links if l.src in used_devs and l.dst in used_devs]
         if not links:
             continue

@@ -6,6 +6,11 @@ spine downlink, destination LAG) and returns per-stage link indices —
 enough to compute link loads / FIM for millions of flows in one shot.
 This is FlowTracer-at-scale: same decisions the hop-by-hop tracer makes,
 evaluated as four fused hash passes instead of per-flow SSH queries.
+
+``simulate_paper_paths`` is hard-wired to the 4-stage paper testbed; for
+arbitrary fabrics (and bit-identical parity with ``EcmpRouting``) use
+``repro.core.vector_sim``, which can route its per-hop hashing through
+``bulk_hash`` here via ``hash_backend="murmur"``.
 """
 
 from __future__ import annotations

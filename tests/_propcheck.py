@@ -1,0 +1,113 @@
+"""Property-testing front-end: ``hypothesis`` when installed, otherwise a
+minimal deterministic fallback with the same surface.
+
+Test modules import ``given``/``settings``/``strategies`` from here instead
+of from ``hypothesis`` directly, so the suite collects and runs from a
+clean environment (the container has no ``hypothesis``).  The fallback is
+intentionally tiny: each strategy draws pseudo-random examples from an rng
+seeded by the test name, with the range endpoints forced as the first two
+examples (the cheapest form of adversarial input).  No shrinking.
+
+``PROPCHECK_MAX_EXAMPLES`` caps the per-test example count (default 25)
+so the pure-Python property tests stay fast; declared ``max_examples``
+below the cap are honoured.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _CAP = int(os.environ.get("PROPCHECK_MAX_EXAMPLES", "25"))
+
+    class _Strategy:
+        """A generator of example values: ``draw(rng) -> value``."""
+
+        def __init__(self, draw, edges=()):
+            self._draw = draw
+            self.edges = tuple(edges)  # forced first examples
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, fn) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self._draw(rng)),
+                             [fn(e) for e in self.edges])
+
+        def filter(self, pred) -> "_Strategy":
+            def draw(rng):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise RuntimeError("propcheck filter: no value accepted")
+            return _Strategy(draw, [e for e in self.edges if pred(e)])
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             [min_value, max_value])
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5, [False, True])
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq), seq[:2])
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            edges = []
+            if min_size <= max_size:
+                edge_rng = random.Random(0)
+                edges = [[elements.draw(edge_rng) for _ in range(min_size)],
+                         [elements.draw(edge_rng) for _ in range(max_size)]]
+            return _Strategy(draw, edges)
+
+    def settings(*, max_examples: int = 100, deadline=None, **_kw):
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            n = min(getattr(fn, "_pc_max_examples", 100), _CAP)
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+
+            def wrapper():
+                for i in range(n):
+                    if i < len(strats[0].edges) and all(
+                            i < len(s.edges) for s in strats):
+                        args = [s.edges[i] for s in strats]
+                    else:
+                        rng = random.Random(seed0 + i)
+                        args = [s.draw(rng) for s in strats]
+                    try:
+                        fn(*args)
+                    except Exception:
+                        print(f"propcheck falsified {fn.__qualname__} "
+                              f"with args={args!r}")
+                        raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,60 @@
+"""Shared fixtures: the paper testbed, workloads, traces, and compiled
+fabrics are session-scoped so the many modules that exercise the same
+2-rack topology build it once instead of per test/module."""
+
+import pytest
+
+from repro.core import (
+    EcmpRouting, FlowTracer, bipartite_pairs, build_multipod_fabric,
+    build_paper_testbed, compile_fabric, nic_ip, server_name,
+    synthesize_flows,
+)
+
+
+@pytest.fixture(scope="session")
+def paper_fabric():
+    return build_paper_testbed()
+
+
+def _paper_workload(fabric, flows_per_pair):
+    rack0 = [server_name(i) for i in range(8)]
+    rack1 = [server_name(8 + i) for i in range(8)]
+    wl = bipartite_pairs(rack0, rack1, flows_per_pair=flows_per_pair)
+    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
+    return fabric, wl, flows
+
+
+@pytest.fixture(scope="session")
+def paper_setup(paper_fabric):
+    """(fabric, workload, flows) at the paper's 256-flow scale."""
+    return _paper_workload(paper_fabric, flows_per_pair=16)
+
+
+@pytest.fixture(scope="session")
+def paper_setup_small(paper_fabric):
+    """Same testbed, half the flows — for tests where scale is irrelevant."""
+    return _paper_workload(paper_fabric, flows_per_pair=8)
+
+
+@pytest.fixture(scope="session")
+def paper_compiled(paper_fabric):
+    return compile_fabric(paper_fabric)
+
+
+@pytest.fixture(scope="session")
+def paper_traced_seed7(paper_setup):
+    """One ECMP trace at the reference seed, shared by the system tests."""
+    fab, wl, flows = paper_setup
+    return FlowTracer(fab, EcmpRouting(fab, seed=7), wl, flows).trace()
+
+
+@pytest.fixture(scope="session")
+def multipod_small():
+    """A downscaled 2-pod DCN fabric + inter-pod bipartite workload."""
+    fab = build_multipod_fabric(num_pods=2, hosts_per_pod=8,
+                                leaves_per_pod=2, num_spines=4)
+    pod0 = [f"host-{i}" for i in range(8)]
+    pod1 = [f"host-{8 + i}" for i in range(8)]
+    wl = bipartite_pairs(pod0, pod1, flows_per_pair=4)
+    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=1)
+    return fab, wl, flows

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.fabric import Device, Fabric, Link, SERVER, LEAF
 from repro.core.fim import fim, link_flow_counts, max_min_throughput, per_layer_fim
@@ -78,6 +78,59 @@ def test_per_layer_drops_idle_layers():
     paths = _paths_from_counts(fab, [1, 1, 1, 1])
     layers = per_layer_fim(paths, fab, layers=["layer", "nonexistent"])
     assert list(layers) == ["layer"]
+
+
+def _multi_layer_fabric(n_layers: int, n_links: int) -> Fabric:
+    """A chain a -> h0 -> h1 -> ... -> b with n parallel links per stage."""
+    names = ["a"] + [f"h{i}" for i in range(n_layers - 1)] + ["b"]
+    devices = [Device(names[0], LEAF)] + \
+        [Device(n, LEAF) for n in names[1:-1]] + [Device(names[-1], SERVER)]
+    links = [
+        Link(names[s], f"p{s}-{i}", names[s + 1], f"q{s}-{i}", 100.0, f"L{s}")
+        for s in range(n_layers) for i in range(n_links)
+    ]
+    return Fabric(devices, links)
+
+
+def test_only_used_leaves_filters_idle_devices():
+    """Links touching devices that carried no traffic are excluded."""
+    fab = _multi_layer_fabric(1, 3)
+    extra = Fabric(
+        list(fab.devices.values()) + [Device("idle", LEAF)],
+        fab.links + [Link("a", "px", "idle", "qx", 100.0, "layer_idle")],
+    )
+    paths = {0: [extra.links[0]], 1: [extra.links[1]]}
+    out = per_layer_fim(paths, extra, only_used_leaves=True)
+    # the idle layer disappears entirely; L0 keeps only links between used
+    # devices (all three a->b links qualify: both endpoints carried flows)
+    assert set(out) == {"L0"}
+    assert out["L0"][1] == 3
+
+
+class _CountingPaths(dict):
+    """Mapping that counts .values() traversals — a structural regression
+    guard for the used-devices hoist in per_layer_fim (pre-fix the set was
+    rebuilt from every path once per layer: O(layers * paths))."""
+
+    def __init__(self, *a):
+        super().__init__(*a)
+        self.values_calls = 0
+
+    def values(self):
+        self.values_calls += 1
+        return super().values()
+
+
+def test_per_layer_fim_scans_paths_once_regression():
+    n_layers = 6
+    fab = _multi_layer_fabric(n_layers, 2)
+    paths = _CountingPaths(
+        {fid: [fab.links[s * 2] for s in range(n_layers)] for fid in range(4)})
+    out = per_layer_fim(paths, fab, only_used_leaves=True)
+    assert len(out) == n_layers
+    # one scan for link counts + one for the hoisted used-device set;
+    # the pre-fix implementation scanned 2x per layer (13 for 6 layers).
+    assert paths.values_calls <= 3, paths.values_calls
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.checkpoint import restore, save, latest_step
 from repro.configs import ARCHS
@@ -62,6 +62,7 @@ def test_straggler_needs_samples():
     assert det.check() == []
 
 
+@pytest.mark.slow
 def test_run_with_restarts_resumes_from_checkpoint():
     """Simulated host failure mid-training: the loop restores the latest
     checkpoint and completes with the exact same final state as an

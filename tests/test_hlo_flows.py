@@ -2,7 +2,7 @@
 decomposition conservation."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.hlo_flows import (
     collectives_to_flows, computation_multipliers, extract_collectives,

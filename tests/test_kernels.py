@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import attention_ref
@@ -20,7 +20,8 @@ KEY = jax.random.PRNGKey(0)
 @pytest.mark.parametrize("S", [128, 256])
 @pytest.mark.parametrize("hd", [64, 128])
 @pytest.mark.parametrize("causal", [True, False])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    pytest.param(jnp.float32, marks=pytest.mark.slow), jnp.bfloat16])
 def test_flash_attention_sweep(S, hd, causal, dtype):
     q = jax.random.normal(KEY, (2, S, hd), dtype)
     k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, S, hd), dtype)
@@ -50,7 +51,8 @@ def test_flash_attention_block_shapes(block_q, block_k):
     (96, 1, 64, 32, 32),   # S not a multiple of Q (pad path)... 96%32==0
     (80, 2, 16, 8, 32),    # pad path: 80 % 32 != 0
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    pytest.param(jnp.float32, marks=pytest.mark.slow), jnp.bfloat16])
 def test_ssd_kernel_sweep(S, H, hd, N, Q, dtype):
     Bz = 2
     x = (jax.random.normal(KEY, (Bz, S, H, hd)) * 0.5).astype(dtype)

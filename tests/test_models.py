@@ -31,7 +31,17 @@ def make_batch(cfg, *, labels=True, key=KEY):
     return batch
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+# The heaviest reduced configs dominate suite wall time (jamba alone is
+# ~60 s); they run under -m slow / the full suite, while the fast default
+# keeps one dense smoke per variant plus the per-family decode tests below.
+SLOW_SMOKE = {"jamba-1.5-large-398b", "deepseek-v2-lite-16b",
+              "whisper-large-v3", "mamba2-1.3b", "qwen2-moe-a2.7b",
+              "qwen2-vl-72b", "codeqwen1.5-7b", "glm4-9b", "qwen2-72b"}
+
+
+@pytest.mark.parametrize("name", [
+    pytest.param(n, marks=pytest.mark.slow) if n in SLOW_SMOKE else n
+    for n in sorted(ARCHS)])
 def test_arch_smoke_forward_and_train_step(name):
     """One forward + one grad step per assigned architecture (reduced)."""
     cfg = ARCHS[name].reduced()
@@ -50,9 +60,10 @@ def test_arch_smoke_forward_and_train_step(name):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), name
 
 
-@pytest.mark.parametrize("name", ["granite-3-2b", "deepseek-v2-lite-16b",
-                                  "mamba2-1.3b", "jamba-1.5-large-398b",
-                                  "whisper-large-v3"])
+@pytest.mark.parametrize("name", [
+    "granite-3-2b", "deepseek-v2-lite-16b", "mamba2-1.3b",
+    pytest.param("jamba-1.5-large-398b", marks=pytest.mark.slow),
+    "whisper-large-v3"])
 def test_decode_matches_forward(name):
     """Token-by-token decode with cache == full forward logits (the cache
     correctness property, per cache family).

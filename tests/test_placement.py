@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import (
     EcmpRouting, Forwarder, bipartite_pairs, build_paper_testbed,

@@ -9,24 +9,19 @@
 import pytest
 
 from repro.core import (
-    EcmpRouting, FlowTracer, StaticRouting, analyze_paths, bipartite_pairs,
-    build_paper_testbed, fim, nic_ip, per_pair_throughput, server_name,
-    static_route_assignment, synthesize_flows,
+    FlowTracer, StaticRouting, analyze_paths, fim, per_pair_throughput,
+    static_route_assignment,
 )
 
 
 @pytest.fixture(scope="module")
-def testbed():
-    fab = build_paper_testbed()
-    rack0 = [server_name(i) for i in range(8)]
-    rack1 = [server_name(8 + i) for i in range(8)]
-    wl = bipartite_pairs(rack0, rack1, flows_per_pair=16)
-    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
-    return fab, wl, flows
+def static_assignment(paper_setup):
+    fab, wl, flows = paper_setup
+    return static_route_assignment(fab, flows)
 
 
-def test_testbed_matches_paper_dimensions(testbed):
-    fab, wl, flows = testbed
+def test_testbed_matches_paper_dimensions(paper_setup):
+    fab, wl, flows = paper_setup
     # paper: 4 leaves x 4 spines x 4 links = 64 links per direction; 256
     # flows -> ideal 4 flows/link
     assert len(fab.links_by_layer("leaf-to-spine")) == 64
@@ -36,9 +31,9 @@ def test_testbed_matches_paper_dimensions(testbed):
     assert len(flows) == 256
 
 
-def test_ecmp_shows_imbalance(testbed):
-    fab, wl, flows = testbed
-    res = FlowTracer(fab, EcmpRouting(fab, seed=7), wl, flows).trace()
+def test_ecmp_shows_imbalance(paper_setup, paper_traced_seed7):
+    fab, wl, flows = paper_setup
+    res = paper_traced_seed7
     assert len(res.paths) == 256
     agg = fim(res.paths, fab)
     # hash-realization dependent; the paper measured 36.5%.  any healthy
@@ -46,9 +41,9 @@ def test_ecmp_shows_imbalance(testbed):
     assert 15.0 < agg < 60.0, agg
 
 
-def test_static_routing_balances(testbed):
-    fab, wl, flows = testbed
-    table, paths = static_route_assignment(fab, flows)
+def test_static_routing_balances(paper_setup, static_assignment):
+    fab, wl, flows = paper_setup
+    table, paths = static_assignment
     assert fim(paths, fab) == pytest.approx(0.0, abs=1e-9)
     # the static table is consumable by the tracer and reproduces the plan
     res = FlowTracer(fab, StaticRouting(fab, table), wl, flows).trace()
@@ -57,19 +52,20 @@ def test_static_routing_balances(testbed):
     assert got == want
 
 
-def test_imbalance_reduction_matches_paper_claim(testbed):
+def test_imbalance_reduction_matches_paper_claim(paper_setup, paper_traced_seed7,
+                                                 static_assignment):
     """Paper abstract: 'a 30% reduction in imbalance'."""
-    fab, wl, flows = testbed
-    ecmp_paths = FlowTracer(fab, EcmpRouting(fab, seed=7), wl, flows).trace().paths
-    _, static_paths = static_route_assignment(fab, flows)
+    fab, wl, flows = paper_setup
+    ecmp_paths = paper_traced_seed7.paths
+    _, static_paths = static_assignment
     reduction = fim(ecmp_paths, fab) - fim(static_paths, fab)
     assert reduction >= 15.0  # paper: 36.5 - 6.2 = 30.3
 
 
-def test_throughput_spread(testbed):
-    fab, wl, flows = testbed
-    ecmp_paths = FlowTracer(fab, EcmpRouting(fab, seed=7), wl, flows).trace().paths
-    _, static_paths = static_route_assignment(fab, flows)
+def test_throughput_spread(paper_setup, paper_traced_seed7, static_assignment):
+    fab, wl, flows = paper_setup
+    ecmp_paths = paper_traced_seed7.paths
+    _, static_paths = static_assignment
     tp_e = sorted(per_pair_throughput(flows, ecmp_paths).values())
     tp_s = sorted(per_pair_throughput(flows, static_paths).values())
     # static: every pair at line rate (400 Gb/s); ECMP: visibly degraded
@@ -78,9 +74,9 @@ def test_throughput_spread(testbed):
     assert max(tp_e) <= 400.0 + 1e-6
 
 
-def test_report_summary(testbed):
-    fab, wl, flows = testbed
-    res = FlowTracer(fab, EcmpRouting(fab, seed=7), wl, flows).trace()
+def test_report_summary(paper_setup, paper_traced_seed7):
+    fab, wl, flows = paper_setup
+    res = paper_traced_seed7
     rep = analyze_paths(res.paths, fab)
     assert rep.total_flows == 256
     assert set(rep.per_layer_fim) == {

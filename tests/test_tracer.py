@@ -1,24 +1,18 @@
 """Algorithm 1: parallel path discovery — correctness & invariants."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import (
-    ADHOC, PERSISTENT, EcmpRouting, FlowTracer, LatencyModel, PairSpec,
-    WorkloadDescription, auto_processes, bipartite_pairs, build_paper_testbed,
-    nic_ip, server_name, synthesize_flows,
+    ADHOC, PERSISTENT, EcmpRouting, FlowTracer, LatencyModel,
+    WorkloadDescription, auto_processes,
 )
 from repro.core.fabric import SERVER
 
 
 @pytest.fixture(scope="module")
-def setup():
-    fab = build_paper_testbed()
-    rack0 = [server_name(i) for i in range(8)]
-    rack1 = [server_name(8 + i) for i in range(8)]
-    wl = bipartite_pairs(rack0, rack1, flows_per_pair=8)
-    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
-    return fab, wl, flows
+def setup(paper_setup_small):
+    return paper_setup_small
 
 
 def _names(paths):

@@ -23,6 +23,7 @@ def small_model():
     return Model(cfg), cfg
 
 
+@pytest.mark.slow
 def test_loss_decreases(small_model):
     model, cfg = small_model
     tc = TrainConfig(optimizer=AdamWConfig(lr=3e-3, warmup_steps=2,
@@ -39,6 +40,7 @@ def test_loss_decreases(small_model):
     assert all(np.isfinite(losses))
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch(small_model):
     """accum=4 over one batch == single step on the same batch (same total
     gradient, same update), modulo bf16 noise."""

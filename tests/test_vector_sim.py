@@ -1,0 +1,184 @@
+"""Differential tests: the vectorized engine must reproduce the hop-by-hop
+``FlowTracer`` + ``EcmpRouting`` **exactly** — same paths, same link
+loads, same FIM — across fabric shapes, hash-field modes, and seeds.
+This is the contract that makes Monte-Carlo results from ``vector_sim``
+statements about the real (traced) routing behaviour."""
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    FIELDS_5TUPLE, FIELDS_IP_PAIR, FIELDS_VXLAN, EcmpRouting, FlowTracer,
+    bipartite_pairs, build_multipod_fabric, build_paper_testbed,
+    compile_fabric, ecmp_hash, fim, fim_from_counts, fim_vector,
+    flow_fields_matrix, flow_hash_fields, link_flow_counts, monte_carlo_fim,
+    nic_ip, per_layer_fim, server_name, simulate_paths, synthesize_flows,
+)
+from repro.core.vector_sim import ecmp_hash_vec
+
+MODES = [FIELDS_5TUPLE, FIELDS_VXLAN, FIELDS_IP_PAIR]
+
+
+def _tracer_paths(fab, wl, flows, seed, mode):
+    res = FlowTracer(fab, EcmpRouting(fab, seed=seed, fields=mode),
+                     wl, flows).trace()
+    return {k: [l.name for l in v] for k, v in res.paths.items()}
+
+
+def _vector_paths(result, seed_index):
+    return {k: [l.name for l in v]
+            for k, v in result.paths_for_seed(seed_index).items()}
+
+
+# ---------------------------------------------------------------------------
+# hash primitives
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**63 - 1), st.integers(0, 2**32 - 1),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_ecmp_hash_vec_matches_scalar(seed, f0, f1):
+    fields = np.array([[f0, f1]], np.uint64)
+    seeds = np.array([seed], np.uint64)
+    got = int(ecmp_hash_vec(fields, seeds[None, :])[0, 0])
+    assert got == ecmp_hash([f0, f1], seed)
+
+
+def test_flow_fields_matrix_matches_scalar(paper_setup):
+    _, _, flows = paper_setup
+    for mode in MODES:
+        mat = flow_fields_matrix(flows, mode)
+        for j, f in enumerate(flows):
+            assert mat[j].tolist() == flow_hash_fields(f, mode)
+
+
+# ---------------------------------------------------------------------------
+# path / load / FIM identity on the paper testbed
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_paths_identical_paper_testbed(paper_setup, paper_compiled, mode):
+    fab, wl, flows = paper_setup
+    seeds = [0, 7, 1234567, 2**40 + 17]
+    res = simulate_paths(paper_compiled, flows, seeds, fields=mode)
+    for i, seed in enumerate(seeds):
+        assert _vector_paths(res, i) == _tracer_paths(fab, wl, flows, seed, mode)
+
+
+def test_link_counts_and_fim_identical(paper_setup, paper_compiled):
+    fab, wl, flows = paper_setup
+    seeds = [3, 99]
+    res = simulate_paths(paper_compiled, flows, seeds)
+    counts = res.link_flow_counts()
+    agg, per_layer = fim_from_counts(counts, paper_compiled)
+    for i, seed in enumerate(seeds):
+        tr = FlowTracer(fab, EcmpRouting(fab, seed=seed), wl, flows).trace()
+        dict_counts = link_flow_counts(tr.paths)
+        for lid, link in enumerate(paper_compiled.links):
+            assert counts[i, lid] == dict_counts.get(link.name, 0)
+        assert agg[i] == pytest.approx(fim(tr.paths, fab), rel=1e-12)
+        for layer, (val, _n) in per_layer_fim(tr.paths, fab).items():
+            assert per_layer[layer][i] == pytest.approx(val, rel=1e-12)
+
+
+def test_only_used_leaves_identical(multipod_small):
+    """Partial workloads leave idle leaves; the per-seed used-device
+    restriction must match the dict implementation."""
+    fab, wl, flows = multipod_small
+    flows = flows[: len(flows) // 2]
+    comp = compile_fabric(fab)
+    seeds = [0, 11]
+    res = simulate_paths(comp, flows, seeds)
+    agg, per_layer = fim_from_counts(res.link_flow_counts(), comp,
+                                     only_used_leaves=True)
+    for i, seed in enumerate(seeds):
+        wl_half = wl
+        tr = FlowTracer(fab, EcmpRouting(fab, seed=seed), wl_half, flows).trace()
+        assert agg[i] == pytest.approx(
+            fim(tr.paths, fab, only_used_leaves=True), rel=1e-12)
+        for layer, (val, _n) in per_layer_fim(
+                tr.paths, fab, only_used_leaves=True).items():
+            assert per_layer[layer][i] == pytest.approx(val, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# randomized fabric shapes (property test)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(1, 3),
+       st.integers(0, 2**31), st.sampled_from(MODES))
+@settings(max_examples=8, deadline=None)
+def test_random_shapes_identical(spines, links_per, flows_per_pair, seed, mode):
+    fab = build_paper_testbed(num_spines=spines,
+                              links_per_leaf_spine=links_per,
+                              servers_per_rack=4)
+    rack0 = [server_name(i) for i in range(4)]
+    rack1 = [server_name(4 + i) for i in range(4)]
+    wl = bipartite_pairs(rack0, rack1, flows_per_pair=flows_per_pair)
+    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
+    res = simulate_paths(fab, flows, [seed], fields=mode)
+    assert _vector_paths(res, 0) == _tracer_paths(fab, wl, flows, seed, mode)
+
+
+@given(st.integers(2, 3), st.integers(2, 4), st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_multipod_shapes_identical(pods, leaves_per_pod, seed):
+    fab = build_multipod_fabric(num_pods=pods, hosts_per_pod=4,
+                                leaves_per_pod=leaves_per_pod, num_spines=4)
+    pod0 = [f"host-{i}" for i in range(4)]
+    pod1 = [f"host-{4 + i}" for i in range(4)]
+    wl = bipartite_pairs(pod0, pod1, flows_per_pair=2)
+    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=1)
+    res = simulate_paths(fab, flows, [seed])
+    assert _vector_paths(res, 0) == _tracer_paths(fab, wl, flows, seed,
+                                                  FIELDS_5TUPLE)
+
+
+# ---------------------------------------------------------------------------
+# monte_carlo front end + murmur backend
+# ---------------------------------------------------------------------------
+
+
+def test_monte_carlo_fim_from_workload(paper_compiled, paper_setup):
+    _, wl, flows = paper_setup
+    mc = monte_carlo_fim(paper_compiled, wl, np.arange(64))
+    assert mc.aggregate.shape == (64,)
+    assert set(mc.per_layer) == {"host-to-leaf", "leaf-to-spine",
+                                 "spine-to-leaf", "leaf-to-host"}
+    # the paper's regime: substantial expected imbalance, strictly positive
+    assert 15.0 < mc.aggregate.mean() < 60.0
+    assert (mc.aggregate >= 0).all()
+    s = mc.summary()
+    assert s["aggregate"]["min"] <= s["aggregate"]["p50"] <= s["aggregate"]["max"]
+    # workload synthesis inside monte_carlo_fim == explicit flow list
+    mc2 = monte_carlo_fim(paper_compiled, flows, np.arange(64))
+    np.testing.assert_allclose(mc.aggregate, mc2.aggregate)
+
+
+def test_murmur_backend_valid_and_statistically_similar(paper_compiled,
+                                                        paper_setup):
+    fab, wl, flows = paper_setup
+    res = simulate_paths(paper_compiled, flows, np.arange(16),
+                         hash_backend="murmur")
+    # topologically valid chains ending at the right host
+    paths = res.paths_for_seed(0)
+    by_id = {f.flow_id: f for f in flows}
+    for fid, path in paths.items():
+        assert path[0].src == by_id[fid].src
+        assert path[-1].dst == by_id[fid].dst
+        for a, b in zip(path, path[1:]):
+            assert a.dst == b.src
+    # same imbalance regime as the exact hash (both uniform avalanches)
+    exact = fim_vector(simulate_paths(paper_compiled, flows, np.arange(16)))
+    murmur = fim_vector(res)
+    assert abs(exact.mean() - murmur.mean()) < 12.0
+
+
+def test_unknown_backend_raises(paper_compiled, paper_setup):
+    _, _, flows = paper_setup
+    with pytest.raises(ValueError):
+        simulate_paths(paper_compiled, flows[:4], [0], hash_backend="xxh3")
