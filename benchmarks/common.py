@@ -2,11 +2,22 @@
 
 from __future__ import annotations
 
+import os
 import time
 
 from repro.core import (
     bipartite_pairs, build_paper_testbed, nic_ip, server_name, synthesize_flows,
 )
+
+# Every emitted row, for the machine-readable BENCH_results.json that
+# benchmarks/run.py writes next to the CSV stream.
+RESULTS: list[dict] = []
+
+
+def bench_seeds(default: int) -> int:
+    """Seed count for Monte-Carlo benchmarks; ``BENCH_SEEDS`` overrides it
+    so CI can smoke the benchmark modules on tiny shapes."""
+    return int(os.environ.get("BENCH_SEEDS", default))
 
 
 def paper_setup(flows_per_pair: int = 16):
@@ -29,5 +40,24 @@ def timeit(fn, *, repeats: int = 3) -> float:
     return times[len(times) // 2]
 
 
+def _parse_derived(derived: str) -> dict[str, float]:
+    """Pull ``k=v`` float metrics out of a derived string, best effort."""
+    out = {}
+    for tok in derived.split():
+        if "=" in tok:
+            k, _, v = tok.partition("=")
+            try:
+                out[k] = float(v.rstrip("x%"))
+            except ValueError:
+                pass
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    RESULTS.append({
+        "name": name,
+        "us_per_call": round(us_per_call, 1),
+        "derived": derived,
+        "metrics": _parse_derived(derived),
+    })

@@ -18,9 +18,9 @@ from repro.core import (
     compile_fabric, fim, flow_fields_matrix, monte_carlo_fim, nic_ip,
     simulate_paths, static_route_assignment, synthesize_flows,
 )
-from .common import emit, paper_setup
+from .common import bench_seeds, emit, paper_setup
 
-NUM_SEEDS = 1024
+NUM_SEEDS = bench_seeds(1024)
 MODES = {"ecmp_5tuple": FIELDS_5TUPLE, "vxlan": FIELDS_VXLAN,
          "ip_pair": FIELDS_IP_PAIR}
 

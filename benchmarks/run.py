@@ -1,17 +1,25 @@
 """Benchmark harness: one module per paper figure + beyond-paper extras.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes the same rows to
+``BENCH_results.json`` so the perf trajectory is machine-trackable
+across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig3a ...  # subset
+    BENCH_SEEDS=8 python -m benchmarks.run fig3a       # tiny smoke shapes
 """
 
+import json
+import os
+import platform
 import sys
+import time
 
 from . import (
     bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
     fig4_thread_scaling, fig5_connection_strategies, monte_carlo_fim,
-    placement_ablation, roofline, vxlan_entropy,
+    placement_ablation, roofline, throughput_sweep, vxlan_entropy,
 )
+from .common import RESULTS
 
 BENCHES = {
     "fig3a": fig3a_routing_comparison.run,
@@ -20,17 +28,37 @@ BENCHES = {
     "fig5": fig5_connection_strategies.run,
     "bulk_scale": bulk_scale.run,
     "monte_carlo": monte_carlo_fim.run,
+    "throughput": throughput_sweep.run,
     "placement": placement_ablation.run,
     "vxlan": vxlan_entropy.run,
     "roofline": roofline.run,
 }
 
+RESULTS_PATH = "BENCH_results.json"
+
 
 def main() -> None:
     names = sys.argv[1:] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench(es): {unknown}; have {list(BENCHES)}")
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name]()
+    payload = {
+        "schema": 1,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "benches": names,
+        # smoke runs (BENCH_SEEDS=8 in CI) are tagged so trajectory
+        # tooling never mistakes tiny-shape numbers for the baseline
+        "bench_seeds_override": os.environ.get("BENCH_SEEDS"),
+        "rows": RESULTS,
+    }
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
 
 
 if __name__ == "__main__":

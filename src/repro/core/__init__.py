@@ -23,7 +23,11 @@ from .ecmp import (
 from .compile_fabric import CompiledFabric, compile_fabric
 from .vector_sim import (
     VectorTraceResult, MonteCarloFim, simulate_paths, fim_from_counts,
-    fim_vector, monte_carlo_fim,
+    fim_vector, monte_carlo_fim, resolve_flows,
+)
+from .vector_throughput import (
+    MonteCarloThroughput, batched_max_min, max_min_rates, pair_rate_matrix,
+    throughput_from_result, monte_carlo_throughput,
 )
 from .fim import fim, per_layer_fim, link_flow_counts, max_min_throughput, per_pair_throughput
 from .tracer import (
@@ -51,7 +55,9 @@ __all__ = [
     "FIELDS_5TUPLE", "FIELDS_VXLAN", "FIELDS_IP_PAIR",
     "CompiledFabric", "compile_fabric",
     "VectorTraceResult", "MonteCarloFim", "simulate_paths", "fim_from_counts",
-    "fim_vector", "monte_carlo_fim",
+    "fim_vector", "monte_carlo_fim", "resolve_flows",
+    "MonteCarloThroughput", "batched_max_min", "max_min_rates",
+    "pair_rate_matrix", "throughput_from_result", "monte_carlo_throughput",
     "fim", "per_layer_fim", "link_flow_counts", "max_min_throughput",
     "per_pair_throughput",
     "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",

@@ -16,8 +16,9 @@ Section I).  Per-pair throughput is the sum over the pair's flows.
 
 from __future__ import annotations
 
+import heapq
 from collections import defaultdict
-from collections.abc import Iterable, Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 from .fabric import Fabric, Link
 from .flows import Flow
@@ -96,14 +97,18 @@ def per_layer_fim(
     return out
 
 
-def max_min_throughput(
-    paths: Mapping[int, Path], *, flows: Iterable[Flow] | None = None
-) -> dict[int, float]:
+def max_min_throughput(paths: Mapping[int, Path]) -> dict[int, float]:
     """Progressive-filling max-min fair rates (Gb/s) per flow id.
 
     Iteratively saturate the tightest link: rate = residual capacity /
     unfrozen flows crossing it; freeze those flows; repeat.  Exact for the
     single-path, equal-demand case the paper evaluates.
+
+    This is the readable scalar reference the vectorized engine
+    (``core/vector_throughput.py``) is differentially tested against.
+    The bottleneck is found with a lazy-invalidation heap: stale entries
+    (their share no longer matches the link's current residual/count) are
+    skipped on pop, and a link is re-pushed whenever a freeze drains it.
     """
     link_cap: dict[str, float] = {}
     link_flows: dict[str, set[int]] = defaultdict(set)
@@ -116,19 +121,23 @@ def max_min_throughput(
     active: set[int] = set(paths.keys())
     residual = dict(link_cap)
     live_flows = {k: set(v) for k, v in link_flows.items()}
+    heap = [(residual[name] / len(fl), name)
+            for name, fl in live_flows.items() if fl]
+    heapq.heapify(heap)
     while active:
         # bottleneck link = min residual/active_flows among links w/ active flows
-        best_link, best_share = None, float("inf")
-        for name, fl in live_flows.items():
-            if not fl:
-                continue
-            share = residual[name] / len(fl)
-            if share < best_share:
+        best_link = None
+        while heap:
+            share, name = heapq.heappop(heap)
+            fl = live_flows[name]
+            if fl and share == residual[name] / len(fl):
                 best_link, best_share = name, share
+                break
         if best_link is None:
             for fid in active:
                 rate[fid] = float("inf")
             break
+        drained: set[str] = set()
         for fid in list(live_flows[best_link]):
             rate[fid] = best_share
             active.discard(fid)
@@ -136,7 +145,12 @@ def max_min_throughput(
                 if fid in live_flows[path_link.name]:
                     live_flows[path_link.name].discard(fid)
                     residual[path_link.name] -= best_share
+                    drained.add(path_link.name)
         live_flows[best_link].clear()
+        for name in drained:
+            fl = live_flows[name]
+            if fl:
+                heapq.heappush(heap, (residual[name] / len(fl), name))
     return rate
 
 

@@ -41,6 +41,21 @@ from .fabric import Fabric
 from .flows import Flow, WorkloadDescription, synthesize_flows
 from .fim import Path
 
+
+def resolve_flows(
+    comp: CompiledFabric,
+    workload: WorkloadDescription | Sequence[Flow],
+) -> list[Flow]:
+    """Standard Monte-Carlo front-end contract: a ``WorkloadDescription``
+    is synthesized into flows (NIC count inferred from the compiled
+    fabric's key table); an explicit flow sequence passes through."""
+    if isinstance(workload, WorkloadDescription):
+        from .fabric import nic_ip
+        nics = max(int(ip.split(".")[1]) for ip in comp.key_of_ip) + 1
+        return synthesize_flows(workload, nic_ip=nic_ip,
+                                nics_per_server=nics)
+    return list(workload)
+
 EXACT = "exact"    # splitmix64 over CRC32 fields == core/ecmp.py bit-for-bit
 MURMUR = "murmur"  # kernels/flowhash murmur3 (TPU bulk_hash path)
 
@@ -315,13 +330,7 @@ def monte_carlo_fim(
     flow list.
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
-    if isinstance(workload, WorkloadDescription):
-        from .fabric import nic_ip
-        nics = max(int(ip.split(".")[1]) for ip in comp.key_of_ip) + 1
-        flows = synthesize_flows(workload, nic_ip=nic_ip,
-                                 nics_per_server=nics)
-    else:
-        flows = list(workload)
+    flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
                          hash_backend=hash_backend)
     agg, per_layer = fim_from_counts(

@@ -62,6 +62,11 @@ except ModuleNotFoundError:
             return _Strategy(lambda rng: rng.random() < 0.5, [False, True])
 
         @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                             [min_value, max_value])
+
+        @staticmethod
         def sampled_from(seq) -> _Strategy:
             seq = list(seq)
             return _Strategy(lambda rng: rng.choice(seq), seq[:2])

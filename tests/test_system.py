@@ -9,8 +9,8 @@
 import pytest
 
 from repro.core import (
-    FlowTracer, StaticRouting, analyze_paths, fim, per_pair_throughput,
-    static_route_assignment,
+    FlowTracer, StaticRouting, analyze_paths, fim, monte_carlo_throughput,
+    per_pair_throughput, static_route_assignment,
 )
 
 
@@ -63,15 +63,23 @@ def test_imbalance_reduction_matches_paper_claim(paper_setup, paper_traced_seed7
 
 
 def test_throughput_spread(paper_setup, paper_traced_seed7, static_assignment):
+    """ECMP-vs-static throughput via the vectorized Monte-Carlo engine,
+    anchored to the tracer + scalar model at the reference seed."""
     fab, wl, flows = paper_setup
-    ecmp_paths = paper_traced_seed7.paths
     _, static_paths = static_assignment
-    tp_e = sorted(per_pair_throughput(flows, ecmp_paths).values())
+    mc = monte_carlo_throughput(fab, flows, [7, 11, 42])
     tp_s = sorted(per_pair_throughput(flows, static_paths).values())
     # static: every pair at line rate (400 Gb/s); ECMP: visibly degraded
     assert all(abs(t - 400.0) < 1e-6 for t in tp_s)
-    assert min(tp_e) < 350.0
-    assert max(tp_e) <= 400.0 + 1e-6
+    assert mc.per_pair.shape == (16, 3)
+    assert mc.per_pair.min() < 350.0
+    assert mc.per_pair.max() <= 400.0 + 1e-6
+    # seed 7 of the sweep == the hop-by-hop trace fed through the scalar
+    # max-min model (the engine is a drop-in replacement for that loop)
+    tp_e = per_pair_throughput(flows, paper_traced_seed7.paths)
+    vec = mc.pair_throughput_for_seed(0)
+    for pair, rate in tp_e.items():
+        assert vec[pair] == pytest.approx(rate, rel=1e-9)
 
 
 def test_report_summary(paper_setup, paper_traced_seed7):

@@ -1,0 +1,219 @@
+"""Differential tests: the batched max-min engine must reproduce the
+scalar ``max_min_throughput`` reference within 1e-9 relative tolerance —
+across fabric shapes, workloads, seed sweeps, and the edge cases the
+scalar code special-cases (zero-link flows, residual exhaustion,
+duplicate links in a path)."""
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    batched_max_min, bipartite_pairs, build_multipod_fabric,
+    build_paper_testbed, compile_fabric, max_min_rates, max_min_throughput,
+    monte_carlo_throughput, nic_ip, pair_rate_matrix, per_pair_throughput,
+    server_name, simulate_paths, synthesize_flows, throughput_from_result,
+)
+from repro.core.fabric import Device, Fabric, Link, LEAF, SERVER
+
+
+def _assert_rates_match(res, flows, rates, seed_indices=None):
+    """Vector rates (N, S) == scalar reference per materialized seed."""
+    idxs = seed_indices if seed_indices is not None else range(res.num_seeds)
+    for i in idxs:
+        scalar = max_min_throughput(res.paths_for_seed(i))
+        for j, f in enumerate(flows):
+            want = scalar[f.flow_id]
+            got = rates[j, i]
+            if np.isinf(want):
+                assert np.isinf(got)
+            else:
+                assert got == pytest.approx(want, rel=1e-9), (
+                    f"flow {f.flow_id} seed index {i}: {got} != {want}")
+
+
+# ---------------------------------------------------------------------------
+# differential identity on the paper testbed + multipod
+# ---------------------------------------------------------------------------
+
+
+def test_rates_match_scalar_paper_testbed(paper_setup, paper_compiled):
+    _, _, flows = paper_setup
+    res = simulate_paths(paper_compiled, flows, [0, 7, 1234567, 2**40 + 17])
+    _assert_rates_match(res, flows, max_min_rates(res))
+
+
+def test_rates_match_scalar_multipod(multipod_small):
+    fab, _, flows = multipod_small
+    res = simulate_paths(compile_fabric(fab), flows, [3, 99])
+    _assert_rates_match(res, flows, max_min_rates(res))
+
+
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(1, 3),
+       st.integers(0, 2**31))
+@settings(max_examples=6, deadline=None)
+def test_random_shapes_rates_match(spines, links_per, flows_per_pair, seed):
+    fab = build_paper_testbed(num_spines=spines,
+                              links_per_leaf_spine=links_per,
+                              servers_per_rack=4)
+    rack0 = [server_name(i) for i in range(4)]
+    rack1 = [server_name(4 + i) for i in range(4)]
+    wl = bipartite_pairs(rack0, rack1, flows_per_pair=flows_per_pair)
+    flows = synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
+    res = simulate_paths(fab, flows, [seed, seed + 1])
+    _assert_rates_match(res, flows, max_min_rates(res))
+
+
+@given(st.integers(0, 2**31), st.integers(1, 17))
+@settings(max_examples=4, deadline=None)
+def test_seed_block_invariance(seed, block):
+    """Blocked cache tiling must never change the rates."""
+    fab, flows = _paper_small()
+    res = simulate_paths(fab, flows, [seed, seed + 5, seed + 11])
+    a = batched_max_min(res.link_ids, res.compiled.link_gbps,
+                        assume_unique=True, seed_block=block)
+    b = batched_max_min(res.link_ids, res.compiled.link_gbps,
+                        assume_unique=True, seed_block=10**9)
+    np.testing.assert_array_equal(a, b)
+
+
+def _paper_small():
+    fab = compile_fabric(build_paper_testbed(servers_per_rack=4))
+    rack0 = [server_name(i) for i in range(4)]
+    rack1 = [server_name(4 + i) for i in range(4)]
+    wl = bipartite_pairs(rack0, rack1, flows_per_pair=4)
+    return fab, synthesize_flows(wl, nic_ip=nic_ip, nics_per_server=2)
+
+
+# ---------------------------------------------------------------------------
+# per-pair aggregation + Monte-Carlo front end
+# ---------------------------------------------------------------------------
+
+
+def test_per_pair_matches_scalar(paper_setup, paper_compiled):
+    _, _, flows = paper_setup
+    res = simulate_paths(paper_compiled, flows, [7, 42])
+    tp = throughput_from_result(res)
+    for i in range(2):
+        scalar = per_pair_throughput(flows, res.paths_for_seed(i))
+        vec = tp.pair_throughput_for_seed(i)
+        assert set(vec) == set(scalar)
+        for pair, rate in scalar.items():
+            assert vec[pair] == pytest.approx(rate, rel=1e-9)
+
+
+def test_monte_carlo_front_end(paper_compiled, paper_setup):
+    _, wl, flows = paper_setup
+    mc = monte_carlo_throughput(paper_compiled, wl, np.arange(32))
+    assert mc.rates.shape == (256, 32)
+    assert mc.per_pair.shape == (16, 32)
+    assert mc.num_seeds == 32
+    # physically sane: positive, never above line rate
+    assert (mc.rates > 0).all()
+    assert mc.per_pair.max() <= 400.0 + 1e-6
+    s = mc.summary()
+    assert set(s) == {"flow_rate", "pair_total", "pair_min", "pair_median"}
+    assert s["pair_min"]["min"] <= s["pair_median"]["p50"] <= 400.0 + 1e-6
+    # workload synthesis inside the front end == explicit flow list
+    mc2 = monte_carlo_throughput(paper_compiled, flows, np.arange(32))
+    np.testing.assert_allclose(mc.rates, mc2.rates)
+
+
+def test_pair_rate_matrix_orders_pairs_first_seen(paper_setup):
+    _, _, flows = paper_setup
+    rates = np.ones((len(flows), 2))
+    pairs, per_pair = pair_rate_matrix(flows, rates)
+    seen = []
+    for f in flows:
+        if (f.src, f.dst) not in seen:
+            seen.append((f.src, f.dst))
+    assert pairs == seen
+    # 16 flows per pair, rate 1 each
+    np.testing.assert_allclose(per_pair, 16.0)
+
+
+# ---------------------------------------------------------------------------
+# edge cases (satellite): synthetic link-id tensors vs hand-built paths
+# ---------------------------------------------------------------------------
+
+
+def _line_links(caps):
+    return [Link("a", f"p{i}", "b", f"q{i}", c, "layer")
+            for i, c in enumerate(caps)]
+
+
+def test_zero_link_flow_infinite_rate():
+    """A flow traversing no links hits the scalar code's residual-exhausted
+    branch and must come out inf from both engines."""
+    links = _line_links([100.0])
+    paths = {0: [links[0]], 1: []}
+    scalar = max_min_throughput(paths)
+    assert scalar[0] == pytest.approx(100.0)
+    assert scalar[1] == float("inf")
+    ids = np.array([[[0], [-1]]], np.int32)          # (H=1, N=2, S=1)
+    rates = batched_max_min(ids, np.array([100.0]))
+    assert rates[0, 0] == pytest.approx(100.0)
+    assert np.isinf(rates[1, 0])
+
+
+def test_all_zero_link_flows():
+    ids = np.full((2, 3, 2), -1, np.int32)
+    rates = batched_max_min(ids, np.array([100.0]))
+    assert np.isinf(rates).all()
+
+
+@given(st.integers(1, 16))
+@settings(max_examples=10, deadline=None)
+def test_all_flows_share_one_link(n_flows):
+    links = _line_links([100.0])
+    paths = {i: [links[0]] for i in range(n_flows)}
+    scalar = max_min_throughput(paths)
+    ids = np.zeros((1, n_flows, 1), np.int32)
+    rates = batched_max_min(ids, np.array([100.0]))
+    for i in range(n_flows):
+        assert rates[i, 0] == pytest.approx(scalar[i], rel=1e-12)
+        assert rates[i, 0] == pytest.approx(100.0 / n_flows)
+
+
+@given(st.lists(st.floats(1.0, 1000.0), min_size=2, max_size=6),
+       st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_heterogeneous_capacities(caps, rngseed):
+    """Random multi-hop paths over links of different capacity."""
+    links = _line_links(caps)
+    rng = np.random.default_rng(rngseed)
+    n_flows, n_hops = 8, min(3, len(caps))
+    idmat = rng.integers(0, len(caps), (n_hops, n_flows, 1)).astype(np.int32)
+    # a few flows get shorter paths
+    idmat[n_hops - 1, rng.integers(0, n_flows, 2), 0] = -1
+    paths = {}
+    for j in range(n_flows):
+        hop_ids = [int(i) for i in idmat[:, j, 0] if i >= 0]
+        dedup = list(dict.fromkeys(hop_ids))        # scalar uses sets
+        paths[j] = [links[i] for i in dedup]
+    scalar = max_min_throughput(paths)
+    rates = batched_max_min(idmat, np.array(caps))
+    for j in range(n_flows):
+        want, got = scalar[j], rates[j, 0]
+        if np.isinf(want):
+            assert np.isinf(got)
+        else:
+            assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_duplicate_link_in_path_counted_once():
+    """The scalar engine keys on link-name sets; a flow listed twice on a
+    link must not be double-counted or double-drained."""
+    links = _line_links([100.0, 50.0])
+    paths = {0: [links[0], links[1]], 1: [links[0]]}
+    scalar = max_min_throughput(paths)
+    # duplicate link 0 entry for flow 0 in the tensor form
+    ids = np.array([[[0], [0]], [[1], [-1]], [[0], [-1]]], np.int32)
+    rates = batched_max_min(ids, np.array([100.0, 50.0]))
+    assert rates[0, 0] == pytest.approx(scalar[0], rel=1e-12)
+    assert rates[1, 0] == pytest.approx(scalar[1], rel=1e-12)
+
+
+def test_batched_max_min_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        batched_max_min(np.zeros((2, 3), np.int32), np.array([1.0]))
