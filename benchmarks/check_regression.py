@@ -1,0 +1,124 @@
+"""CI benchmark-regression guard.
+
+Diffs a freshly written ``BENCH_results.json`` against the last
+committed entry and fails (exit 1) when any benchmark row slowed by more
+than ``--threshold`` (default 2.5x).  Rows are matched by *bench and
+shape*: the row name plus the ``BENCH_SEEDS`` override and the
+``seeds=`` / ``flows=`` metrics the row itself reports — a tiny-shape
+smoke row is never compared against a full-shape baseline row.  Rows
+with no timing on either side (``us_per_call <= 0``, the derived-only
+rows) are ignored, and a small absolute slack keeps microsecond-scale
+rows from tripping the ratio on scheduler noise.
+
+Noisy runners can opt out by setting ``BENCH_REGRESSION_SKIP=1``.
+
+    python -m benchmarks.check_regression \
+        --old benchmarks/BENCH_baseline_smoke.json --new BENCH_results.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 2.5
+# a row must slow by this many absolute microseconds *and* by the ratio
+# before it counts — sub-50us rows are timer noise at smoke shapes
+DEFAULT_ABS_SLACK_US = 50.0
+
+SKIP_ENV = "BENCH_REGRESSION_SKIP"
+
+
+def shape_key(payload: dict, row: dict) -> tuple:
+    """Identity of a benchmark measurement: bench row + run shape."""
+    metrics = row.get("metrics", {})
+    return (
+        row.get("name"),
+        payload.get("bench_seeds_override"),
+        metrics.get("seeds"),
+        metrics.get("flows"),
+    )
+
+
+def timed_rows(payload: dict) -> dict[tuple, float]:
+    """shape_key -> us_per_call for every row that actually carries a
+    timing (derived-only rows emit 0.0 and are not comparable)."""
+    out = {}
+    for row in payload.get("rows", []):
+        us = float(row.get("us_per_call", 0.0))
+        if us > 0.0:
+            out[shape_key(payload, row)] = us
+    return out
+
+
+def compare(
+    old_payload: dict,
+    new_payload: dict,
+    *,
+    threshold: float = DEFAULT_THRESHOLD,
+    abs_slack_us: float = DEFAULT_ABS_SLACK_US,
+) -> tuple[list[str], int]:
+    """(regression messages, number of rows compared)."""
+    old = timed_rows(old_payload)
+    new = timed_rows(new_payload)
+    regressions = []
+    compared = 0
+    for key, new_us in sorted(new.items(), key=str):
+        old_us = old.get(key)
+        if old_us is None:
+            continue                      # new bench or different shape
+        compared += 1
+        if new_us > threshold * old_us and new_us - old_us > abs_slack_us:
+            name, override, seeds, flows = key
+            shape = f"BENCH_SEEDS={override} seeds={seeds} flows={flows}"
+            regressions.append(
+                f"{name} [{shape}]: {old_us:.1f}us -> {new_us:.1f}us "
+                f"({new_us / old_us:.2f}x, threshold {threshold}x)")
+    return regressions, compared
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--old", required=True,
+                        help="baseline BENCH_results.json (last committed)")
+    parser.add_argument("--new", default="BENCH_results.json",
+                        help="freshly produced BENCH_results.json")
+    parser.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    parser.add_argument("--abs-slack-us", type=float,
+                        default=DEFAULT_ABS_SLACK_US)
+    args = parser.parse_args(argv)
+
+    if os.environ.get(SKIP_ENV):
+        print(f"bench-regression guard skipped ({SKIP_ENV} set)")
+        return 0
+    with open(args.old) as f:
+        old_payload = json.load(f)
+    with open(args.new) as f:
+        new_payload = json.load(f)
+    regressions, compared = compare(
+        old_payload, new_payload,
+        threshold=args.threshold, abs_slack_us=args.abs_slack_us)
+    if regressions:
+        print(f"bench-regression guard: {len(regressions)} regression(s) "
+              f"over {compared} comparable row(s):")
+        for line in regressions:
+            print(f"  REGRESSION {line}")
+        return 1
+    if compared == 0 and timed_rows(old_payload) and timed_rows(new_payload):
+        # both sides carry timings but nothing matched: the baseline is
+        # stale (renamed rows, changed shapes) and the guard would
+        # otherwise pass green forever — fail loudly instead
+        print("bench-regression guard: 0 comparable rows between baseline "
+              "and new results — baseline is stale or shapes drifted; "
+              "refresh it (see ROADMAP) or set "
+              f"{SKIP_ENV}=1 to bypass")
+        return 1
+    print(f"bench-regression guard: OK ({compared} comparable row(s), "
+          f"threshold {args.threshold}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,16 @@
-"""Paper Fig. 3(a): RoCE throughput distribution + FIM, ECMP vs static.
+"""Paper Fig. 3(a), generalized: FIM + RoCE throughput per routing strategy.
 
-256 bipartite flows on the 2-rack testbed.  The paper measured
-FIM = 36.5% (ECMP) vs 6.2% (static) and near-line-rate throughput for
-static.  The paper 'repeated multiple times'; one vectorized
-``simulate_paths`` pass (bit-identical to the hop-by-hop tracer) now
-feeds BOTH the FIM distribution and the full per-pair max-min
-throughput distribution over 256 hash seeds — the old code ran the
-dict-based throughput model on just two representative seeds."""
+The paper compares two configurations — ECMP hashing (FIM = 36.5%,
+colliding flows far below line rate) and static routing (FIM = 6.2%,
+near-line-rate) — on the 16-node 2-rack testbed with 256 bipartite
+flows.  This benchmark turns that into a *strategy matrix*: every
+registered vectorized routing strategy (baseline ECMP, PRIME-style
+multi-part-entropy spraying, greedy congestion-aware selection) runs
+from ONE shared fabric compile and one shared hash-field pass, and each
+emits its FIM distribution and per-pair max-min throughput distribution
+over the seed sweep (1024 seeds by default; ``BENCH_SEEDS`` overrides).
+The static-routing rows are kept as the paper's deterministic anchor.
+"""
 
 from __future__ import annotations
 
@@ -15,43 +19,64 @@ import time
 import numpy as np
 
 from repro.core import (
-    compile_fabric, fim, fim_from_counts, per_pair_throughput, simulate_paths,
-    static_route_assignment, throughput_from_result,
+    FIELDS_5TUPLE, CongestionAware, EcmpStrategy, PrimeSpraying,
+    compile_fabric, fim, fim_from_counts, flow_fields_matrix,
+    per_pair_throughput, simulate_paths, static_route_assignment,
+    throughput_from_result,
 )
 from .common import bench_seeds, emit, paper_setup
+
+# (row tag, strategy instance) — the matrix one run sweeps.  Paper
+# anchors: ECMP FIM 36.5%, static 6.2%, line rate 400 Gb/s per pair.
+STRATEGY_MATRIX = [
+    ("ecmp", EcmpStrategy()),
+    ("prime_spray", PrimeSpraying(flowlets=8)),
+    ("congestion", CongestionAware()),
+]
 
 
 def run() -> None:
     fab, wl, flows = paper_setup()
-    comp = compile_fabric(fab)
-    num_seeds = bench_seeds(256)
+    comp = compile_fabric(fab)              # ONE compile for every strategy
+    num_seeds = bench_seeds(1024)
     seeds = np.arange(num_seeds)
+    field_mat = flow_fields_matrix(flows, FIELDS_5TUPLE)  # one CRC pass
 
-    t0 = time.perf_counter()
-    res = simulate_paths(comp, flows, seeds)
-    ecmp_fims, _ = fim_from_counts(res.link_flow_counts(), comp)
-    elapsed = time.perf_counter() - t0      # FIM sweep only: comparable
-    t0 = time.perf_counter()                # with the PR-1 era row
-    tp = throughput_from_result(res)
-    tp_elapsed = time.perf_counter() - t0
+    results = {}
+    for tag, strategy in STRATEGY_MATRIX:
+        t0 = time.perf_counter()
+        res = simulate_paths(comp, flows, seeds, strategy=strategy,
+                             field_matrix=field_mat)
+        fims, _ = fim_from_counts(res.link_flow_counts(), comp)
+        sim_elapsed = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tp = throughput_from_result(res)
+        tp_elapsed = time.perf_counter() - t0
+        results[tag] = fims
 
-    pair_min = tp.per_pair.min(axis=0)       # (S,) worst pair per seed
-    pair_med = np.median(tp.per_pair, axis=0)
+        pair_min = tp.per_pair.min(axis=0)   # (S,) worst pair per seed
+        pair_med = np.median(tp.per_pair, axis=0)
+        emit(f"fig3a_{tag}_fim_pct", sim_elapsed / num_seeds * 1e6,
+             f"mean={fims.mean():.1f} "
+             f"range=[{fims.min():.1f},{fims.max():.1f}] "
+             f"p95={np.percentile(fims, 95):.1f} "
+             f"flowlets={res.num_flowlets // res.num_flows}"
+             + (" paper=36.5" if tag == "ecmp" else ""))
+        emit(f"fig3a_{tag}_throughput_gbps", tp_elapsed / num_seeds * 1e6,
+             f"mean={tp.rates.mean() * len(flows) / tp.per_pair.shape[0]:.0f} "
+             f"min={pair_min.mean():.0f} med={pair_med.mean():.0f} "
+             f"worst={tp.per_pair.min():.0f} line_rate=400 seeds={num_seeds}")
 
     _, static_paths = static_route_assignment(fab, flows)
     static_fim = fim(static_paths, fab)
     tp_s = sorted(per_pair_throughput(flows, static_paths).values())
-
-    emit("fig3a_ecmp_fim_pct", elapsed / num_seeds * 1e6,
-         f"mean={ecmp_fims.mean():.1f} "
-         f"range=[{ecmp_fims.min():.1f},{ecmp_fims.max():.1f}] "
-         f"p95={np.percentile(ecmp_fims, 95):.1f} paper=36.5")
     emit("fig3a_static_fim_pct", 0.0,
          f"value={static_fim:.2f} paper=6.2")
-    emit("fig3a_ecmp_throughput_gbps", tp_elapsed / num_seeds * 1e6,
-         f"min={pair_min.mean():.0f} med={pair_med.mean():.0f} "
-         f"worst={tp.per_pair.min():.0f} line_rate=400 seeds={num_seeds}")
     emit("fig3a_static_throughput_gbps", 0.0,
          f"min={tp_s[0]:.0f} med={tp_s[len(tp_s)//2]:.0f} line_rate=400")
     emit("fig3a_imbalance_reduction_pct", 0.0,
-         f"value={ecmp_fims.mean() - static_fim:.1f} paper=30.3")
+         f"value={results['ecmp'].mean() - static_fim:.1f} paper=30.3")
+    emit("fig3a_spray_vs_ecmp_fim_delta_pct", 0.0,
+         f"value={results['ecmp'].mean() - results['prime_spray'].mean():.1f} "
+         f"ecmp={results['ecmp'].mean():.1f} "
+         f"spray={results['prime_spray'].mean():.1f}")

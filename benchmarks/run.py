@@ -13,6 +13,7 @@ import os
 import platform
 import sys
 import time
+import traceback
 
 from . import (
     bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
@@ -43,8 +44,16 @@ def main() -> None:
     if unknown:
         raise SystemExit(f"unknown bench(es): {unknown}; have {list(BENCHES)}")
     print("name,us_per_call,derived")
+    errors: dict[str, str] = {}
     for name in names:
-        BENCHES[name]()
+        # a failing bench must not silently truncate the run: the rest of
+        # the matrix still executes and lands rows, the failure is recorded
+        # in the payload, and the process exits non-zero at the end
+        try:
+            BENCHES[name]()
+        except Exception as exc:
+            traceback.print_exc()
+            errors[name] = f"{type(exc).__name__}: {exc}"
     payload = {
         "schema": 1,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
@@ -56,9 +65,15 @@ def main() -> None:
         "bench_seeds_override": os.environ.get("BENCH_SEEDS"),
         "rows": RESULTS,
     }
+    if errors:
+        payload["errors"] = errors
     with open(RESULTS_PATH, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
+    if errors:
+        raise SystemExit(
+            f"bench module(s) failed: {sorted(errors)} "
+            f"(partial rows written to {RESULTS_PATH})")
 
 
 if __name__ == "__main__":

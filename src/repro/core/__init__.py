@@ -26,8 +26,13 @@ from .vector_sim import (
     fim_vector, monte_carlo_fim, resolve_flows,
 )
 from .vector_throughput import (
-    MonteCarloThroughput, batched_max_min, max_min_rates, pair_rate_matrix,
-    throughput_from_result, monte_carlo_throughput,
+    MonteCarloThroughput, batched_max_min, max_min_rates,
+    flow_rates_from_flowlets, pair_rate_matrix, throughput_from_result,
+    monte_carlo_throughput,
+)
+from .strategies import (
+    RoutingStrategy, EcmpStrategy, PrimeSpraying, CongestionAware,
+    register_strategy, resolve_strategy, available_strategies,
 )
 from .fim import fim, per_layer_fim, link_flow_counts, max_min_throughput, per_pair_throughput
 from .tracer import (
@@ -57,7 +62,10 @@ __all__ = [
     "VectorTraceResult", "MonteCarloFim", "simulate_paths", "fim_from_counts",
     "fim_vector", "monte_carlo_fim", "resolve_flows",
     "MonteCarloThroughput", "batched_max_min", "max_min_rates",
-    "pair_rate_matrix", "throughput_from_result", "monte_carlo_throughput",
+    "flow_rates_from_flowlets", "pair_rate_matrix", "throughput_from_result",
+    "monte_carlo_throughput",
+    "RoutingStrategy", "EcmpStrategy", "PrimeSpraying", "CongestionAware",
+    "register_strategy", "resolve_strategy", "available_strategies",
     "fim", "per_layer_fim", "link_flow_counts", "max_min_throughput",
     "per_pair_throughput",
     "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",

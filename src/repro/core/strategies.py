@@ -1,0 +1,268 @@
+"""Pluggable routing strategies over the compiled-fabric candidate tables.
+
+The paper's whole point is comparing routing schemes by flow imbalance
+(Fig. 3: ECMP vs static).  PR 1-2 built the vectorized N-flows x S-seeds
+path + max-min throughput engine; this module makes the *routing
+decision* pluggable on top of it, so the schemes from the related work
+can be evaluated under the same Monte-Carlo harness:
+
+* ``EcmpStrategy`` — baseline per-flow ECMP, bit-identical to
+  ``simulate_paths``'s default walk (and therefore to ``EcmpRouting`` +
+  ``FlowTracer``); differential-tested in tests/test_strategies.py.
+* ``PrimeSpraying`` — PRIME-style multi-part-entropy spraying
+  (arXiv 2507.23012): each flow splits into K flowlets carrying 1/K of
+  the demand, and every flowlet gets a distinct entropy label appended
+  to its hash fields.  The label is *multi-part*: the flowlet index is
+  decomposed into mixed-radix digits over ``parts`` and each digit rides
+  as its own extra header field, so every switch's pseudo-random hash
+  integrates several independently varying entropy sources.  K=1 appends
+  nothing and degenerates to ECMP exactly.
+* ``CongestionAware`` — greedy congestion-aware path selection in the
+  spirit of Predictive Load Balancing (arXiv 2506.08132): flows are
+  placed one at a time and every hop picks the candidate egress link
+  with the least demand already routed through it, falling back to the
+  flow's ECMP hash only to break exact load ties (which keeps the
+  hash-seed sweep meaningful: seeds explore the tie space).
+
+A strategy consumes the compiled fabric + flow table + seed sweep and
+returns a ``VectorTraceResult``; multi-path strategies emit flowlet
+columns with ``flow_index`` / ``demand`` metadata, which
+``link_flow_counts`` (demand-weighted FIM) and the weighted
+``batched_max_min`` rate model aggregate back per parent flow.
+
+Register custom schemes with ``register_strategy``; ``simulate_paths``
+/ ``monte_carlo_fim`` / ``monte_carlo_throughput`` accept either a
+registered name or a strategy instance via ``strategy=``.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Callable, Sequence
+
+import numpy as np
+
+from .compile_fabric import CompiledFabric
+from .ecmp import FIELDS_5TUPLE, flow_fields_matrix
+from .flows import Flow
+from .vector_sim import EXACT, VectorTraceResult, ecmp_walk, hash_grid
+
+
+class RoutingStrategy:
+    """Interface: turn (compiled fabric, flows, seeds) into routed paths.
+
+    ``route`` receives the already-normalized inputs from
+    ``simulate_paths`` and must return a ``VectorTraceResult`` whose
+    flowlet ``demand`` fractions sum to 1 per parent flow.
+    """
+
+    #: registry name; instances may be configured, the name is the family
+    name: str = "?"
+
+    def route(
+        self,
+        comp: CompiledFabric,
+        flows: list[Flow],
+        seeds_u64: np.ndarray,
+        *,
+        fields: str = FIELDS_5TUPLE,
+        hash_backend: str = EXACT,
+        max_hops: int = 16,
+        field_matrix: np.ndarray | None = None,
+    ) -> VectorTraceResult:
+        raise NotImplementedError
+
+
+class EcmpStrategy(RoutingStrategy):
+    """Per-flow ECMP — the baseline, bit-identical to the default walk."""
+
+    name = "ecmp"
+
+    def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
+              hash_backend=EXACT, max_hops=16, field_matrix=None):
+        from .vector_sim import simulate_paths
+        return simulate_paths(comp, flows, seeds_u64, fields=fields,
+                              hash_backend=hash_backend, max_hops=max_hops,
+                              field_matrix=field_matrix)
+
+
+def _balanced_parts(k: int) -> tuple[int, ...]:
+    """Default multi-part split of K flowlets: the most balanced two-factor
+    decomposition (8 -> (2, 4)); prime or unit K stays single-part."""
+    for a in range(int(np.sqrt(k)), 1, -1):
+        if k % a == 0:
+            return (a, k // a)
+    return (k,)
+
+
+class PrimeSpraying(RoutingStrategy):
+    """PRIME-style multi-part-entropy packet spraying (arXiv 2507.23012).
+
+    Each flow is split into ``flowlets`` equal-demand flowlets; flowlet
+    ``k``'s entropy label is the mixed-radix digit vector of ``k`` over
+    ``parts`` (product must equal ``flowlets``), appended to the flow's
+    hash fields as extra columns so every switch hash integrates all
+    entropy parts.  With ``flowlets=1`` no label is appended and the
+    walk is bit-identical to ``EcmpStrategy``.
+    """
+
+    name = "prime-spray"
+
+    def __init__(self, flowlets: int = 8,
+                 parts: Sequence[int] | None = None):
+        if flowlets < 1:
+            raise ValueError(f"flowlets must be >= 1, got {flowlets}")
+        self.flowlets = int(flowlets)
+        self.parts = (tuple(int(p) for p in parts) if parts is not None
+                      else _balanced_parts(self.flowlets))
+        if any(p < 1 for p in self.parts):
+            raise ValueError(f"entropy parts must be >= 1: {self.parts}")
+        if int(np.prod(self.parts)) != self.flowlets:
+            raise ValueError(
+                f"entropy parts {self.parts} do not multiply to "
+                f"{self.flowlets} flowlets")
+
+    def entropy_labels(self) -> np.ndarray:
+        """(K, P) uint64 mixed-radix digits, one row per flowlet."""
+        k = np.arange(self.flowlets, dtype=np.uint64)
+        cols = []
+        for base in self.parts:
+            cols.append(k % np.uint64(base))
+            k = k // np.uint64(base)
+        return np.stack(cols, axis=1)
+
+    def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
+              hash_backend=EXACT, max_hops=16, field_matrix=None):
+        field_mat = (field_matrix if field_matrix is not None
+                     else flow_fields_matrix(flows, fields))
+        n, k = len(flows), self.flowlets
+        src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
+        if k > 1:
+            field_mat = np.concatenate(
+                [np.repeat(field_mat, k, axis=0),
+                 np.tile(self.entropy_labels(), (n, 1))], axis=1)
+            src_dev, dst_dev, src_key, dst_key = (
+                np.repeat(a, k) for a in (src_dev, dst_dev, src_key, dst_key))
+        flow_index = np.repeat(np.arange(n, dtype=np.int32), k)
+        link_ids = ecmp_walk(
+            comp, src_dev, dst_dev, src_key, dst_key, field_mat, seeds_u64,
+            hash_backend=hash_backend, max_hops=max_hops,
+            describe=lambda j: (f"flow {flows[int(flow_index[j])].flow_id} "
+                                f"flowlet {int(j) % k}"))
+        return VectorTraceResult(
+            compiled=comp, flows=list(flows), seeds=seeds_u64,
+            link_ids=link_ids, flow_index=flow_index,
+            demand=np.full(n * k, 1.0 / k), strategy=self.name)
+
+
+class CongestionAware(RoutingStrategy):
+    """Greedy congestion-aware selection (cf. arXiv 2506.08132).
+
+    Flows are routed sequentially (the placement order models a
+    connection-setup sequence); at every hop the flow takes the candidate
+    egress link carrying the least demand routed so far *under that
+    seed*, with the flow's ECMP hash breaking exact load ties.  The walk
+    is a Python loop over flows but fully vectorized over seeds, so a
+    256-flow x 1024-seed sweep stays in the tens of milliseconds.
+    """
+
+    name = "congestion-aware"
+
+    def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
+              hash_backend=EXACT, max_hops=16, field_matrix=None):
+        field_mat = (field_matrix if field_matrix is not None
+                     else flow_fields_matrix(flows, fields))
+        n, s = len(flows), len(seeds_u64)
+        src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
+        load = np.zeros((s, comp.num_links))
+        link_ids = np.full((max_hops, n, s), -1, np.int32)
+        rows = np.arange(s)
+        hops = 0
+        for j in range(n):
+            state = np.full(s, int(src_dev[j]), np.int64)
+            done = np.zeros(s, bool)
+            for t in range(max_hops):
+                if done.all():
+                    break
+                hops = max(hops, t + 1)
+                key = np.where(comp.is_server[state], src_key[j], dst_key[j])
+                nc = comp.cand_n[state, key]               # (S,)
+                cands = comp.cand[state, key]              # (S, C)
+                valid = ((np.arange(cands.shape[1])[None, :] < nc[:, None])
+                         & (cands >= 0))
+                cl = np.where(valid,
+                              load[rows[:, None], np.maximum(cands, 0)],
+                              np.inf)
+                tie = valid & (cl == cl.min(axis=1)[:, None])
+                n_tie = tie.sum(axis=1)
+                dev_seed = comp.dev_crc[state] ^ seeds_u64
+                h = hash_grid(field_mat[j:j + 1], dev_seed[None, :],
+                              hash_backend)[0]
+                rank = np.where(
+                    n_tie > 1,
+                    (h % np.maximum(n_tie, 1).astype(np.uint64)).astype(
+                        np.int64),
+                    0)
+                col = (tie.cumsum(axis=1) <= rank[:, None]).sum(axis=1)
+                link = cands[rows, np.minimum(col, cands.shape[1] - 1)]
+                link = np.where(done | (nc == 0), -1, link)
+                link_ids[t, j] = link
+                active = link >= 0
+                np.add.at(load, (rows[active], link[active]), 1.0)
+                nxt = np.where(active, comp.link_dst[np.maximum(link, 0)],
+                               state)
+                done |= ~active | comp.is_server[nxt]
+                state = nxt
+            if not done.all():
+                raise RuntimeError(
+                    f"flow {flows[j].flow_id} did not terminate in "
+                    f"{max_hops} hops")
+            arrived = done & (state == dst_dev[j])
+            if not arrived.all():
+                bad = int(np.flatnonzero(~arrived)[0])
+                raise RuntimeError(
+                    f"flow {flows[j].flow_id} (seed index {bad}) terminated "
+                    f"at {comp.device_names[int(state[bad])]}, expected "
+                    f"{flows[j].dst}")
+        return VectorTraceResult(
+            compiled=comp, flows=list(flows), seeds=seeds_u64,
+            link_ids=link_ids[:hops], strategy=self.name)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], RoutingStrategy]] = {}
+
+
+def register_strategy(name: str,
+                      factory: Callable[[], RoutingStrategy]) -> None:
+    """Register a strategy factory under ``name`` so benchmarks and the
+    ``strategy="..."`` string form can construct it on demand."""
+    _REGISTRY[name] = factory
+
+
+def available_strategies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_strategy(strategy: RoutingStrategy | str) -> RoutingStrategy:
+    """A ``RoutingStrategy`` instance passes through; a string constructs
+    the registered default configuration of that family."""
+    if isinstance(strategy, RoutingStrategy):
+        return strategy
+    if isinstance(strategy, str):
+        try:
+            return _REGISTRY[strategy]()
+        except KeyError:
+            raise ValueError(
+                f"unknown routing strategy {strategy!r}; "
+                f"registered: {available_strategies()}") from None
+    raise TypeError(
+        f"strategy must be a RoutingStrategy or registered name, "
+        f"got {type(strategy).__name__}")
+
+
+register_strategy("ecmp", EcmpStrategy)
+register_strategy("prime-spray", PrimeSpraying)
+register_strategy("congestion-aware", CongestionAware)

@@ -99,26 +99,72 @@ def _murmur_hash_grid(fields: np.ndarray, dev_seed: np.ndarray) -> np.ndarray:
     return np.asarray(bulk_hash(flat, 0)).astype(np.uint64).reshape(N, S)
 
 
+def hash_grid(field_mat: np.ndarray, dev_seed: np.ndarray,
+              hash_backend: str) -> np.ndarray:
+    """Per-(flow, seed) hash grid under the selected backend — the one
+    dispatch point shared by the ECMP walk and the routing strategies
+    (so e.g. the congestion-aware tie-break honors ``hash_backend`` the
+    same way the main walk does)."""
+    if hash_backend == EXACT:
+        return ecmp_hash_vec(field_mat, dev_seed)
+    if hash_backend == MURMUR:
+        return _murmur_hash_grid(field_mat, dev_seed)
+    raise ValueError(f"unknown hash backend: {hash_backend}")
+
+
 @dataclasses.dataclass
 class VectorTraceResult:
-    """Paths for N flows under S seeds, as a dense link-id tensor."""
+    """Paths for N flows under S seeds, as a dense link-id tensor.
+
+    Multi-path strategies (PRIME-style spraying) emit more tensor columns
+    than there are flows: each column is a *flowlet* — ``flow_index[j]``
+    names its parent flow (row into ``flows``) and ``demand[j]`` the
+    fraction of the parent's unit demand it carries (flowlet demands sum
+    to 1 per flow).  Single-path strategies leave the defaults
+    (``flow_index == arange(N)``, ``demand == 1``), and every consumer
+    below degenerates to the PR-1 behaviour exactly.
+    """
 
     compiled: CompiledFabric
     flows: list[Flow]
     seeds: np.ndarray        # (S,) uint64 (as given, masked to 64 bit)
-    link_ids: np.ndarray     # (H, N, S) int32 link ids, -1 past arrival
+    link_ids: np.ndarray     # (H, Nf, S) int32 link ids, -1 past arrival
+    flow_index: np.ndarray | None = None   # (Nf,) parent-flow row per column
+    demand: np.ndarray | None = None       # (Nf,) demand fraction per column
+    strategy: str = "ecmp"
+
+    def __post_init__(self):
+        nf = self.link_ids.shape[1]
+        if self.flow_index is None:
+            self.flow_index = np.arange(nf, dtype=np.int32)
+        if self.demand is None:
+            self.demand = np.ones(nf)
 
     @property
     def num_flows(self) -> int:
         return len(self.flows)
 
     @property
+    def num_flowlets(self) -> int:
+        return self.link_ids.shape[1]
+
+    @property
     def num_seeds(self) -> int:
         return len(self.seeds)
 
+    @property
+    def is_multipath(self) -> bool:
+        return self.num_flowlets != self.num_flows
+
     def paths_for_seed(self, seed_index: int) -> dict[int, Path]:
         """Materialize one seed's paths in ``FlowTracer`` format (for
-        differential testing / drop-in use with the dict-based tools)."""
+        differential testing / drop-in use with the dict-based tools).
+        Single-path results only; multi-path callers want
+        ``flowlet_paths_for_seed``."""
+        if self.is_multipath:
+            raise ValueError(
+                f"{self.strategy!r} result has {self.num_flowlets} flowlets "
+                f"for {self.num_flows} flows; use flowlet_paths_for_seed")
         links = self.compiled.links
         out: dict[int, Path] = {}
         ids = self.link_ids[:, :, seed_index]
@@ -126,47 +172,65 @@ class VectorTraceResult:
             out[flow.flow_id] = [links[i] for i in ids[:, j] if i >= 0]
         return out
 
+    def flowlet_paths_for_seed(self, seed_index: int) -> dict[int, list[Path]]:
+        """One seed's paths per flow id, as a *list* of flowlet paths."""
+        links = self.compiled.links
+        out: dict[int, list[Path]] = {f.flow_id: [] for f in self.flows}
+        ids = self.link_ids[:, :, seed_index]
+        for j in range(self.num_flowlets):
+            fid = self.flows[int(self.flow_index[j])].flow_id
+            out[fid].append([links[i] for i in ids[:, j] if i >= 0])
+        return out
+
     def link_flow_counts(self) -> np.ndarray:
-        """(S, L) flow count per link per seed — one bincount, no dicts."""
+        """(S, L) flow load per link per seed — one bincount, no dicts.
+
+        Flowlets contribute their ``demand`` fraction, so a sprayed flow
+        still adds up to 1 unit per layer crossing and FIM stays
+        comparable across strategies; uniform unit demand keeps the exact
+        integer counts of the single-path engine.
+        """
         L, S = self.compiled.num_links, self.num_seeds
-        ids = self.link_ids                      # (H, N, S)
+        ids = self.link_ids                      # (H, Nf, S)
         offset = np.arange(S, dtype=np.int64) * L
-        flat = (ids.astype(np.int64) + offset)[ids >= 0]
-        return np.bincount(flat, minlength=S * L).reshape(S, L)
+        keep = ids >= 0
+        flat = (ids.astype(np.int64) + offset)[keep]
+        if (self.demand == 1.0).all():
+            return np.bincount(flat, minlength=S * L).reshape(S, L)
+        w = np.broadcast_to(self.demand[None, :, None], ids.shape)[keep]
+        return np.bincount(flat, weights=w, minlength=S * L).reshape(S, L)
 
 
-def simulate_paths(
-    fabric: Fabric | CompiledFabric,
-    flows: Sequence[Flow],
-    seeds: Sequence[int] | np.ndarray,
+def normalize_seeds(seeds: Sequence[int] | np.ndarray) -> np.ndarray:
+    """(S,) uint64 seed array, masked to 64 bit like the Python tracer."""
+    return np.array(
+        [int(s) & 0xFFFFFFFFFFFFFFFF for s in np.asarray(seeds).tolist()],
+        np.uint64)
+
+
+def ecmp_walk(
+    comp: CompiledFabric,
+    src_dev: np.ndarray,
+    dst_dev: np.ndarray,
+    src_key: np.ndarray,
+    dst_key: np.ndarray,
+    field_mat: np.ndarray,
+    seeds_u64: np.ndarray,
     *,
-    fields: str = FIELDS_5TUPLE,
     hash_backend: str = EXACT,
     max_hops: int = 16,
-    field_matrix: np.ndarray | None = None,
-) -> VectorTraceResult:
-    """Walk every flow through the fabric under every seed, vectorized.
+    describe=lambda n: f"column {n}",
+) -> np.ndarray:
+    """The raw hop-by-hop hashed walk over explicit endpoint/field arrays.
 
     Exactly ``EcmpRouting``'s decision at each hop: candidates from the
     compiled ``Forwarder`` tables, ``hash % n_candidates`` when the set
-    has more than one member, first (only) candidate otherwise.
-
-    ``field_matrix`` optionally supplies precomputed ``flow_fields_matrix``
-    output so repeated sweeps over the same flow table skip the per-flow
-    CRC pass.
+    has more than one member, first (only) candidate otherwise.  Returns
+    the ``(hops, N, S)`` link-id tensor.  ``simulate_paths`` is the
+    flow-level front end; routing strategies (``core/strategies.py``)
+    call this directly with expanded per-flowlet arrays.
     """
-    comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
-    flows = list(flows)
-    seeds_u64 = np.array(
-        [int(s) & 0xFFFFFFFFFFFFFFFF for s in np.asarray(seeds).tolist()],
-        np.uint64)
-    N, S = len(flows), len(seeds_u64)
-    if N == 0:
-        raise ValueError("simulate_paths needs at least one flow")
-    field_mat = (field_matrix if field_matrix is not None
-                 else flow_fields_matrix(flows, fields))  # (N, F) uint64
-
-    src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
+    N, S = len(src_dev), len(seeds_u64)
     state = np.broadcast_to(src_dev[:, None], (N, S)).copy()   # (N, S)
     done = np.zeros((N, S), bool)
     link_ids = np.full((max_hops, N, S), -1, np.int32)
@@ -180,12 +244,7 @@ def simulate_paths(
         key = np.where(comp.is_server[state], src_key[:, None], dst_key[:, None])
         n = comp.cand_n[state, key]                    # (N, S)
         dev_seed = comp.dev_crc[state] ^ seeds_u64[None, :]
-        if hash_backend == EXACT:
-            h = ecmp_hash_vec(field_mat, dev_seed)
-        elif hash_backend == MURMUR:
-            h = _murmur_hash_grid(field_mat, dev_seed)
-        else:
-            raise ValueError(f"unknown hash backend: {hash_backend}")
+        h = hash_grid(field_mat, dev_seed, hash_backend)
         safe_n = np.maximum(n, 1).astype(np.uint64)
         choice = np.where(n > 1, (h % safe_n).astype(np.int64), 0)
         link = comp.cand[state, key, choice]
@@ -201,12 +260,54 @@ def simulate_paths(
     if not arrived.all():
         bad = np.argwhere(~arrived)[0]
         raise RuntimeError(
-            f"flow {flows[bad[0]].flow_id} (seed index {bad[1]}) terminated "
-            f"at {comp.device_names[state[bad[0], bad[1]]]}, expected "
-            f"{flows[bad[0]].dst}")
+            f"{describe(bad[0])} (seed index {bad[1]}) terminated "
+            f"at {comp.device_names[state[bad[0], bad[1]]]}")
+    return link_ids[:hops]
+
+
+def simulate_paths(
+    fabric: Fabric | CompiledFabric,
+    flows: Sequence[Flow],
+    seeds: Sequence[int] | np.ndarray,
+    *,
+    fields: str = FIELDS_5TUPLE,
+    hash_backend: str = EXACT,
+    max_hops: int = 16,
+    field_matrix: np.ndarray | None = None,
+    strategy=None,
+) -> VectorTraceResult:
+    """Walk every flow through the fabric under every seed, vectorized.
+
+    The default (``strategy=None``) is per-flow ECMP, bit-identical to
+    ``EcmpRouting`` + ``FlowTracer``.  ``strategy`` accepts a registered
+    strategy name (``"ecmp"``, ``"prime-spray"``, ``"congestion-aware"``)
+    or a ``RoutingStrategy`` instance, and routes the whole simulation
+    through its vectorized implementation instead (the result may carry
+    flowlet columns — see ``VectorTraceResult``).
+
+    ``field_matrix`` optionally supplies precomputed ``flow_fields_matrix``
+    output so repeated sweeps over the same flow table skip the per-flow
+    CRC pass.
+    """
+    comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
+    flows = list(flows)
+    seeds_u64 = normalize_seeds(seeds)
+    if len(flows) == 0:
+        raise ValueError("simulate_paths needs at least one flow")
+    if strategy is not None:
+        from .strategies import resolve_strategy
+        return resolve_strategy(strategy).route(
+            comp, flows, seeds_u64, fields=fields, hash_backend=hash_backend,
+            max_hops=max_hops, field_matrix=field_matrix)
+    field_mat = (field_matrix if field_matrix is not None
+                 else flow_fields_matrix(flows, fields))  # (N, F) uint64
+    src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
+    link_ids = ecmp_walk(
+        comp, src_dev, dst_dev, src_key, dst_key, field_mat, seeds_u64,
+        hash_backend=hash_backend, max_hops=max_hops,
+        describe=lambda n: f"flow {flows[n].flow_id}")
     return VectorTraceResult(
-        compiled=comp, flows=flows, seeds=seeds_u64,
-        link_ids=link_ids[:hops])
+        compiled=comp, flows=flows, seeds=seeds_u64, link_ids=link_ids)
 
 
 # ---------------------------------------------------------------------------
@@ -322,17 +423,19 @@ def monte_carlo_fim(
     hash_backend: str = EXACT,
     layers: Sequence[str] | None = None,
     only_used_leaves: bool = False,
+    strategy=None,
 ) -> MonteCarloFim:
-    """FIM distribution of ECMP routing across a hash-seed sweep.
+    """FIM distribution of a routing strategy across a hash-seed sweep.
 
     ``workload`` may be a ``WorkloadDescription`` (flows are synthesized
     the standard way, NIC count inferred from the fabric) or an explicit
-    flow list.
+    flow list.  ``strategy`` follows the ``simulate_paths`` contract
+    (default: per-flow ECMP).
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
-                         hash_backend=hash_backend)
+                         hash_backend=hash_backend, strategy=strategy)
     agg, per_layer = fim_from_counts(
         res.link_flow_counts(), comp,
         layers=layers, only_used_leaves=only_used_leaves)

@@ -164,12 +164,78 @@ def _fill_block(sub: np.ndarray, sentinel: int, cap: np.ndarray,
         cur = nxt
 
 
+def _fill_block_weighted(sub: np.ndarray, sentinel: int, cap: np.ndarray,
+                         w: np.ndarray, rates_out: np.ndarray) -> None:
+    """Weighted progressive-fill of one seed block (flowlet demand model).
+
+    Same parallel local-bottleneck formulation as ``_fill_block``, with
+    every flow (column) carrying a positive demand weight ``w``: a link's
+    fair share is ``residual / sum of member weights`` (share *per unit
+    demand*), a flow's rate is ``w * min share over its path``, and the
+    max-min objective is over normalized rates — the standard weighted
+    max-min fairness that makes K equal flowlets of one flow share
+    exactly like the single parent flow when their paths coincide.
+
+    Weighted link occupancy drifts by float epsilons as flows drain, so
+    emptiness is tracked by an exact integer membership count alongside
+    the weighted sum.  Kept separate from the unweighted path, which
+    stays byte-identical to the PR-2 engine.
+    """
+    H, NS = sub.shape
+    SL = sentinel
+    mem = np.bincount(sub.ravel(), minlength=SL + 1).astype(np.float64)
+    counts = np.bincount(sub.ravel(),
+                         weights=np.broadcast_to(w, (H, NS)).ravel(),
+                         minlength=SL + 1)
+    residual = np.empty(SL + 1)
+    residual[:SL] = cap
+    residual[SL] = 0.0
+    share = np.full(SL + 1, np.inf)
+    nz = mem[:SL] > 0
+    share[:SL][nz] = residual[:SL][nz] / counts[:SL][nz]
+
+    haslink = (sub < SL).any(axis=0)
+    rates_out[~haslink] = np.inf           # fim.py's infinite-rate branch
+    aidx = np.flatnonzero(haslink)
+    s = sub[:, aidx]
+    wa = w[aidx]
+    freezable = np.zeros(SL + 1, bool)
+    while aidx.size:
+        fm = share[s].min(axis=0)          # per-flow bottleneck share
+        nbr = np.full(SL + 1, np.inf)      # per-cell min of member shares
+        for h in range(H):
+            np.minimum.at(nbr, s[h], fm)
+        np.equal(nbr[:SL], share[:SL], out=freezable[:SL])
+        fz = freezable[s].any(axis=0)      # flow crosses a local bottleneck
+        fidx = np.flatnonzero(fz)
+        fnorm = fm[fidx]
+        rates_out[aidx[fidx]] = wa[fidx] * fnorm
+        if fidx.size == aidx.size:         # everything froze: no survivors
+            break                          # to drain for
+        cells = s[:, fidx]                 # (H, F) drain the frozen flows
+        flat = cells.ravel()
+        np.subtract.at(mem, flat, 1.0)
+        np.subtract.at(counts, flat,
+                       np.broadcast_to(wa[fidx], cells.shape).ravel())
+        np.subtract.at(residual, flat,
+                       np.broadcast_to(wa[fidx] * fnorm, cells.shape).ravel())
+        m2 = mem[flat]
+        share[flat] = np.where(
+            m2 > 0, residual[flat] / np.maximum(counts[flat], 1e-300), np.inf)
+        share[SL] = np.inf                 # sentinel must stay unroutable
+        keep = ~fz
+        s = np.ascontiguousarray(s[:, keep])
+        aidx = aidx[keep]
+        wa = wa[keep]
+
+
 def batched_max_min(
     link_ids: np.ndarray,
     link_gbps: np.ndarray,
     *,
     assume_unique: bool = False,
     seed_block: int = DEFAULT_SEED_BLOCK,
+    weights: np.ndarray | None = None,
 ) -> np.ndarray:
     """Max-min fair rates (Gb/s) for an ``(H, N, S)`` link-id tensor.
 
@@ -177,6 +243,12 @@ def batched_max_min(
     under seed ``s`` (-1 past the end of the path); ``link_gbps`` maps
     link id -> capacity.  Returns ``(N, S)`` rates; a flow crossing zero
     links gets ``inf`` exactly like the scalar reference.
+
+    ``weights`` optionally gives every tensor column a positive demand
+    weight (flowlets of a sprayed flow carry fractions of the parent's
+    demand): the allocation becomes weighted max-min — fair share per
+    unit demand — and a column's rate is its weight times its bottleneck
+    share.  ``None`` (or all-ones) is the exact unweighted PR-2 engine.
 
     ``assume_unique`` skips the within-path duplicate-link collapse —
     safe for tensors from ``simulate_paths``, whose walked paths are
@@ -189,6 +261,16 @@ def batched_max_min(
     if not assume_unique:
         link_ids = dedup_link_ids(link_ids)
     H, N, S = link_ids.shape
+    if weights is not None:
+        weights = np.asarray(weights, np.float64)
+        if weights.shape != (N,):
+            raise ValueError(
+                f"weights must be ({N},) to match link_ids columns, "
+                f"got {weights.shape}")
+        if not (weights > 0).all():
+            raise ValueError("weights must be strictly positive")
+        if (weights == 1.0).all():
+            weights = None                 # uniform: take the exact path
     L = len(link_gbps)
     cap = np.asarray(link_gbps, np.float64)
     rates = np.empty((S, N))
@@ -214,6 +296,9 @@ def batched_max_min(
         "counts": np.empty(SLb + 1),
         "sub": np.empty((H, NSb), np.int32),
         "cap": np.empty(SLb),
+    } if weights is None else {
+        "sub": np.empty((H, NSb), np.int32),
+        "cap": np.empty(SLb),
     }
     for s0 in range(0, S, Sb):
         s1 = min(s0 + Sb, S)
@@ -225,14 +310,40 @@ def batched_max_min(
         sub[blk < 0] = SL
         capb = ws["cap"][:SL]
         capb[:] = np.broadcast_to(cap, (Sc, L)).ravel()
-        _fill_block(sub, SL, capb, rates[s0:s1].reshape(-1), ws)
+        if weights is None:
+            _fill_block(sub, SL, capb, rates[s0:s1].reshape(-1), ws)
+        else:
+            _fill_block_weighted(sub, SL, capb, np.tile(weights, Sc),
+                                 rates[s0:s1].reshape(-1))
     return rates.T                         # (N, S) transposed view
 
 
 def max_min_rates(result: VectorTraceResult) -> np.ndarray:
-    """``(N, S)`` max-min rates for every flow under every traced seed."""
+    """``(Nf, S)`` max-min rates for every tensor column (flowlet) under
+    every traced seed.  Single-path results: one column per flow, the
+    PR-2 behaviour exactly.  Multi-path results: flowlet columns carry
+    their demand fractions as max-min weights; aggregate per parent flow
+    with ``flow_rates_from_flowlets``."""
+    w = None if (result.demand == 1.0).all() else result.demand
     return batched_max_min(result.link_ids, result.compiled.link_gbps,
-                           assume_unique=True)
+                           assume_unique=True, weights=w)
+
+
+def flow_rates_from_flowlets(result: VectorTraceResult,
+                             flowlet_rates: np.ndarray) -> np.ndarray:
+    """Aggregate ``(Nf, S)`` flowlet rates into ``(N, S)`` per-flow rates
+    by summing columns of the same parent (``result.flow_index``)."""
+    fi = result.flow_index
+    if not result.is_multipath and (fi == np.arange(len(fi))).all():
+        return flowlet_rates
+    if fi.size and (np.diff(fi) >= 0).all():
+        # flowlets grouped by parent (the spraying layout): segment-sum
+        starts = np.flatnonzero(np.diff(fi, prepend=-1) > 0)
+        return np.ascontiguousarray(
+            np.add.reduceat(flowlet_rates, starts, axis=0), dtype=np.float64)
+    out = np.zeros((result.num_flows, flowlet_rates.shape[1]))
+    np.add.at(out, fi, flowlet_rates)
+    return out
 
 
 @dataclasses.dataclass
@@ -303,8 +414,12 @@ def pair_rate_matrix(
 def throughput_from_result(result: VectorTraceResult) -> MonteCarloThroughput:
     """Rate distributions for an already-simulated ``VectorTraceResult``
     (lets callers share one ``simulate_paths`` pass between FIM and
-    throughput, as ``benchmarks/fig3a_routing_comparison.py`` does)."""
-    rates = max_min_rates(result)
+    throughput, as ``benchmarks/fig3a_routing_comparison.py`` does).
+
+    Multi-path results run the weighted fill over flowlet columns and
+    aggregate rates per parent flow, so ``rates`` is always ``(N, S)``
+    over ``result.flows`` regardless of strategy."""
+    rates = flow_rates_from_flowlets(result, max_min_rates(result))
     pairs, per_pair = pair_rate_matrix(result.flows, rates)
     return MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
                                 rates=rates, pairs=pairs, per_pair=per_pair)
@@ -318,15 +433,20 @@ def monte_carlo_throughput(
     fields: str = FIELDS_5TUPLE,
     hash_backend: str = EXACT,
     field_matrix: np.ndarray | None = None,
+    strategy=None,
 ) -> MonteCarloThroughput:
-    """Max-min throughput distribution of ECMP routing across a seed sweep.
+    """Max-min throughput distribution of a routing strategy across a
+    seed sweep.
 
     ``workload`` may be a ``WorkloadDescription`` (flows synthesized the
     standard way, NIC count inferred from the fabric) or an explicit flow
     list — the same front-end contract as ``monte_carlo_fim``.
+    ``strategy`` follows the ``simulate_paths`` contract (default:
+    per-flow ECMP).
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
-                         hash_backend=hash_backend, field_matrix=field_matrix)
+                         hash_backend=hash_backend, field_matrix=field_matrix,
+                         strategy=strategy)
     return throughput_from_result(res)

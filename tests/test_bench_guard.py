@@ -1,0 +1,146 @@
+"""Unit tests for the CI bench-regression guard — this is the
+"demonstrably fires" requirement: the comparison logic must go red on a
+>2.5x slowdown of a same-shape row, stay green otherwise, never compare
+rows across shapes, and honor the noisy-runner opt-out."""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import (
+    SKIP_ENV, compare, main, shape_key, timed_rows,
+)
+
+
+def _payload(rows, override=None):
+    return {"schema": 1, "bench_seeds_override": override, "rows": rows}
+
+
+def _row(name, us, seeds=None, flows=None):
+    metrics = {}
+    if seeds is not None:
+        metrics["seeds"] = seeds
+    if flows is not None:
+        metrics["flows"] = flows
+    return {"name": name, "us_per_call": us, "derived": "", "metrics": metrics}
+
+
+def test_fires_on_slowdown_beyond_threshold():
+    old = _payload([_row("fig3a_ecmp_fim_pct", 100.0, seeds=1024)])
+    new = _payload([_row("fig3a_ecmp_fim_pct", 260.0, seeds=1024)])
+    regressions, compared = compare(old, new)
+    assert compared == 1
+    assert len(regressions) == 1
+    assert "fig3a_ecmp_fim_pct" in regressions[0]
+    assert "2.60x" in regressions[0]
+
+
+def test_passes_below_threshold():
+    old = _payload([_row("fig3a_ecmp_fim_pct", 100.0, seeds=1024)])
+    new = _payload([_row("fig3a_ecmp_fim_pct", 240.0, seeds=1024)])
+    regressions, compared = compare(old, new)
+    assert compared == 1
+    assert regressions == []
+
+
+def test_absolute_slack_swallows_microsecond_noise():
+    """A 3x ratio on a 10us row is timer noise, not a regression."""
+    old = _payload([_row("tiny_row", 10.0, seeds=8)])
+    new = _payload([_row("tiny_row", 30.0, seeds=8)])
+    regressions, _ = compare(old, new)
+    assert regressions == []
+    # but the same ratio above the slack does fire
+    old = _payload([_row("big_row", 100.0, seeds=8)])
+    new = _payload([_row("big_row", 300.0, seeds=8)])
+    regressions, _ = compare(old, new)
+    assert len(regressions) == 1
+
+
+def test_shape_mismatch_is_never_compared():
+    # same row name, but smoke shape vs full shape: not comparable
+    old = _payload([_row("mc_paper_ecmp_5tuple", 100.0, seeds=1024)])
+    new = _payload([_row("mc_paper_ecmp_5tuple", 9000.0, seeds=8)],
+                   override="8")
+    regressions, compared = compare(old, new)
+    assert compared == 0
+    assert regressions == []
+
+
+def test_same_shape_same_override_compares():
+    old = _payload([_row("mc_paper_ecmp_5tuple", 100.0, seeds=8)],
+                   override="8")
+    new = _payload([_row("mc_paper_ecmp_5tuple", 9000.0, seeds=8)],
+                   override="8")
+    regressions, compared = compare(old, new)
+    assert compared == 1
+    assert len(regressions) == 1
+
+
+def test_derived_only_rows_ignored():
+    old = _payload([_row("fig3a_static_fim_pct", 0.0)])
+    new = _payload([_row("fig3a_static_fim_pct", 0.0)])
+    regressions, compared = compare(old, new)
+    assert (regressions, compared) == ([], 0)
+    assert timed_rows(new) == {}
+
+
+def test_new_rows_pass_without_baseline():
+    old = _payload([])
+    new = _payload([_row("brand_new_bench", 5000.0, seeds=1024)])
+    regressions, compared = compare(old, new)
+    assert (regressions, compared) == ([], 0)
+
+
+def test_shape_key_fields():
+    payload = _payload([], override="8")
+    row = _row("x", 1.0, seeds=8, flows=256)
+    assert shape_key(payload, row) == ("x", "8", 8, 256)
+
+
+def test_main_red_and_green(tmp_path, monkeypatch):
+    monkeypatch.delenv(SKIP_ENV, raising=False)
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_payload([_row("b", 100.0, seeds=8)])))
+    new.write_text(json.dumps(_payload([_row("b", 1000.0, seeds=8)])))
+    assert main(["--old", str(old), "--new", str(new)]) == 1
+    new.write_text(json.dumps(_payload([_row("b", 110.0, seeds=8)])))
+    assert main(["--old", str(old), "--new", str(new)]) == 0
+
+
+def test_main_fails_on_zero_comparable_timed_rows(tmp_path, monkeypatch):
+    """A stale baseline (renamed rows / drifted shapes) must not let the
+    guard pass green forever."""
+    monkeypatch.delenv(SKIP_ENV, raising=False)
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_payload([_row("renamed_away", 100.0, seeds=8)])))
+    new.write_text(json.dumps(_payload([_row("brand_new", 100.0, seeds=8)])))
+    assert main(["--old", str(old), "--new", str(new)]) == 1
+    # but an empty baseline (nothing guarded yet) stays green
+    old.write_text(json.dumps(_payload([_row("derived_only", 0.0)])))
+    assert main(["--old", str(old), "--new", str(new)]) == 0
+
+
+def test_opt_out_env_var(tmp_path, monkeypatch):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_payload([_row("b", 100.0, seeds=8)])))
+    new.write_text(json.dumps(_payload([_row("b", 99999.0, seeds=8)])))
+    monkeypatch.setenv(SKIP_ENV, "1")
+    assert main(["--old", str(old), "--new", str(new)]) == 0
+
+
+def test_custom_threshold():
+    old = _payload([_row("b", 100.0, seeds=8)])
+    new = _payload([_row("b", 180.0, seeds=8)])
+    assert compare(old, new, threshold=1.5)[0]
+    assert not compare(old, new, threshold=2.0)[0]
+
+
+@pytest.mark.parametrize("ratio,fires", [(2.49, False), (2.51, True)])
+def test_threshold_boundary(ratio, fires):
+    old = _payload([_row("b", 1000.0, seeds=8)])
+    new = _payload([_row("b", 1000.0 * ratio, seeds=8)])
+    regressions, _ = compare(old, new)
+    assert bool(regressions) == fires
