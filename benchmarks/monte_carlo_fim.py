@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import (
     FIELDS_5TUPLE, FIELDS_IP_PAIR, FIELDS_VXLAN, EcmpRouting, FlowTracer,
-    bipartite_pairs, build_multipod_fabric, build_paper_testbed,
+    bipartite_pairs, build_multipod_fabric,
     compile_fabric, fim, flow_fields_matrix, monte_carlo_fim, nic_ip,
     simulate_paths, static_route_assignment, synthesize_flows,
 )

@@ -16,7 +16,7 @@ from __future__ import annotations
 import time
 
 from repro.core import (
-    EcmpRouting, FlowTracer, StaticRouting, WorkloadDescription, PairSpec,
+    EcmpRouting, FlowTracer, WorkloadDescription, PairSpec,
     build_multipod_fabric, fim, ring_edge_stats, static_route_assignment,
     topology_aware_ring,
 )

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 
 from .common import emit
 

@@ -11,7 +11,6 @@ from collections.abc import Mapping, Sequence
 
 from .fabric import Fabric, Link
 from .fim import fim, link_flow_counts, per_layer_fim
-from .flows import Flow
 
 Path = list[Link]
 

@@ -28,7 +28,6 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import defaultdict
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from collections.abc import Sequence
 

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from ..checkpoint import latest_step, restore, save
 from ..configs import get_arch
 from ..data import SyntheticDataset
-from ..ft import HostFailure, StragglerDetector, run_with_restarts
+from ..ft import StragglerDetector, run_with_restarts
 from ..models import Model
 from ..train import AdamWConfig, TrainConfig, init_train_state, make_train_step
 

@@ -8,7 +8,6 @@ the update is in-place on device).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

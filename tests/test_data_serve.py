@@ -1,9 +1,7 @@
 """Data pipeline determinism + serving engine."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCHS
 from repro.data import SyntheticDataset

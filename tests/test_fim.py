@@ -5,7 +5,7 @@ import pytest
 from _propcheck import given, settings, strategies as st
 
 from repro.core.fabric import Device, Fabric, Link, SERVER, LEAF
-from repro.core.fim import fim, link_flow_counts, max_min_throughput, per_layer_fim
+from repro.core.fim import fim, max_min_throughput, per_layer_fim
 
 
 def _line_fabric(n_links: int) -> Fabric:

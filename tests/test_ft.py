@@ -13,7 +13,7 @@ from repro.checkpoint import restore, save, latest_step
 from repro.configs import ARCHS
 from repro.data import SyntheticDataset
 from repro.ft import (
-    ElasticPlan, HostFailure, StragglerDetector, plan_elastic_mesh,
+    HostFailure, StragglerDetector, plan_elastic_mesh,
     run_with_restarts,
 )
 from repro.models import Model

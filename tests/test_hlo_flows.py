@@ -1,7 +1,6 @@
 """Compiled-HLO collective extraction: parsing, trip counts, flow
 decomposition conservation."""
 
-import pytest
 from _propcheck import given, settings, strategies as st
 
 from repro.core.hlo_flows import (

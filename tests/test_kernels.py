@@ -10,7 +10,6 @@ from _propcheck import given, settings, strategies as st
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flowhash.ops import bulk_hash, link_loads_fim, simulate_paper_paths
-from repro.kernels.flowhash.ref import bulk_hash_ref
 from repro.kernels.ssd.ops import ssd_scan
 from repro.models.ssm import ssd_chunked
 

@@ -1,12 +1,11 @@
 """Placement: automated static routing + topology-aware collective rings."""
 
-import numpy as np
 import pytest
 from _propcheck import given, settings, strategies as st
 
 from repro.core import (
     EcmpRouting, Forwarder, bipartite_pairs, build_paper_testbed,
-    build_multipod_fabric, fim, nic_ip, ring_edge_stats, server_name,
+    fim, nic_ip, ring_edge_stats, server_name,
     static_route_assignment, synthesize_flows, topology_aware_ring,
 )
 from repro.core.placement import enumerate_paths

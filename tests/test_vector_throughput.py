@@ -9,12 +9,12 @@ import pytest
 from _propcheck import given, settings, strategies as st
 
 from repro.core import (
-    batched_max_min, bipartite_pairs, build_multipod_fabric,
-    build_paper_testbed, compile_fabric, max_min_rates, max_min_throughput,
+    batched_max_min, bipartite_pairs, build_paper_testbed, compile_fabric,
+    max_min_rates, max_min_throughput,
     monte_carlo_throughput, nic_ip, pair_rate_matrix, per_pair_throughput,
     server_name, simulate_paths, synthesize_flows, throughput_from_result,
 )
-from repro.core.fabric import Device, Fabric, Link, LEAF, SERVER
+from repro.core.fabric import Link
 
 
 def _assert_rates_match(res, flows, rates, seed_indices=None):
