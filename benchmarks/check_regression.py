@@ -10,6 +10,11 @@ with no timing on either side (``us_per_call <= 0``, the derived-only
 rows) are ignored, and a small absolute slack keeps microsecond-scale
 rows from tripping the ratio on scheduler noise.
 
+Baseline rows that no longer match anything in the new results
+(renamed benches, drifted shapes) are listed as ``ORPHANED`` instead of
+being silently skipped, so a partially stale baseline is visible long
+before the all-rows-stale hard failure.
+
 Noisy runners can opt out by setting ``BENCH_REGRESSION_SKIP=1``.
 
     python -m benchmarks.check_regression \
@@ -53,6 +58,25 @@ def timed_rows(payload: dict) -> dict[tuple, float]:
     return out
 
 
+def describe_key(key: tuple) -> str:
+    name, override, seeds, flows = key
+    return f"{name} [BENCH_SEEDS={override} seeds={seeds} flows={flows}]"
+
+
+def orphaned_rows(old_payload: dict, new_payload: dict) -> list[tuple]:
+    """Baseline shape-keys with no counterpart in the new results.
+
+    An orphan means the baseline row no longer guards anything — the
+    bench was renamed, its shape changed, or it stopped running.  The
+    guard silently skipping them is how a baseline rots until the
+    0-comparable hard failure; surfacing the list makes a partial drift
+    visible the day it happens.
+    """
+    old = timed_rows(old_payload)
+    new = timed_rows(new_payload)
+    return sorted((key for key in old if key not in new), key=str)
+
+
 def compare(
     old_payload: dict,
     new_payload: dict,
@@ -71,10 +95,8 @@ def compare(
             continue                      # new bench or different shape
         compared += 1
         if new_us > threshold * old_us and new_us - old_us > abs_slack_us:
-            name, override, seeds, flows = key
-            shape = f"BENCH_SEEDS={override} seeds={seeds} flows={flows}"
             regressions.append(
-                f"{name} [{shape}]: {old_us:.1f}us -> {new_us:.1f}us "
+                f"{describe_key(key)}: {old_us:.1f}us -> {new_us:.1f}us "
                 f"({new_us / old_us:.2f}x, threshold {threshold}x)")
     return regressions, compared
 
@@ -100,6 +122,16 @@ def main(argv: list[str] | None = None) -> int:
     regressions, compared = compare(
         old_payload, new_payload,
         threshold=args.threshold, abs_slack_us=args.abs_slack_us)
+    orphans = orphaned_rows(old_payload, new_payload)
+    if orphans:
+        # advisory, not a failure (new benches legitimately widen the
+        # matrix) — but never silent: these baseline rows guard nothing
+        # anymore and should be refreshed away (recipe in ROADMAP.md)
+        print(f"bench-regression guard: {len(orphans)} baseline row(s) have "
+              "no counterpart in the new results (renamed bench or drifted "
+              "shape) — refresh the baseline:")
+        for key in orphans:
+            print(f"  ORPHANED {describe_key(key)}")
     if regressions:
         print(f"bench-regression guard: {len(regressions)} regression(s) "
               f"over {compared} comparable row(s):")

@@ -17,8 +17,9 @@ import traceback
 
 from . import (
     bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
-    fig4_thread_scaling, fig5_connection_strategies, monte_carlo_fim,
-    placement_ablation, roofline, throughput_sweep, vxlan_entropy,
+    fig4_thread_scaling, fig5_connection_strategies, hetero_demand,
+    monte_carlo_fim, placement_ablation, roofline, throughput_sweep,
+    vxlan_entropy,
 )
 from .common import RESULTS
 
@@ -28,6 +29,7 @@ BENCHES = {
     "fig4": fig4_thread_scaling.run,
     "fig5": fig5_connection_strategies.run,
     "bulk_scale": bulk_scale.run,
+    "hetero": hetero_demand.run,
     "monte_carlo": monte_carlo_fim.run,
     "throughput": throughput_sweep.run,
     "placement": placement_ablation.run,

@@ -25,7 +25,7 @@ from repro.core import (
     flow_fields_matrix, per_pair_throughput, simulate_paths,
     throughput_from_result,
 )
-from .common import bench_seeds, emit, paper_setup
+from .common import bench_seeds, emit, paper_setup, timeit
 
 SCALAR_BATCH = 8     # seeds per scalar timing batch; the best batch
 SCALAR_BATCHES = 3   # average extrapolates linearly over the full sweep
@@ -87,3 +87,16 @@ def run() -> None:
     emit("tp_sweep_differential_drift", 0.0,
          f"max_rel={drift:.2e} tol=1e-9 "
          f"rates={tp.rates.shape[0]}x{tp.rates.shape[1]}")
+
+    # congestion-aware route: the one remaining per-flow Python loop on
+    # the hot path (greedy placement is inherently sequential over flows,
+    # vectorized over seeds, hop tallies fused) — tracked here so the
+    # regression guard catches it slipping back toward per-hop scatters.
+    # Median-of-repeats: the loop is Python-overhead-bound and a single
+    # shot swings >2x under scheduler noise at smoke shapes
+    t_cong = timeit(lambda: simulate_paths(
+        comp, flows, seeds, strategy="congestion-aware",
+        field_matrix=fields))
+    emit("tp_congestion_route", t_cong / num_seeds * 1e6,
+         f"total_s={t_cong:.3f} per_flow_us={t_cong / len(flows) * 1e6:.0f} "
+         f"seeds={num_seeds} flows={len(flows)}")

@@ -13,7 +13,7 @@ from .fabric import (
 )
 from .flows import (
     Flow, FiveTuple, PairSpec, WorkloadDescription, synthesize_flows,
-    bipartite_pairs,
+    bipartite_pairs, workload_from_flows,
 )
 from .ecmp import (
     EcmpRouting, StaticRouting, RoutingPolicy, Forwarder, ecmp_hash,
@@ -24,6 +24,7 @@ from .compile_fabric import CompiledFabric, compile_fabric
 from .vector_sim import (
     VectorTraceResult, MonteCarloFim, simulate_paths, fim_from_counts,
     fim_vector, monte_carlo_fim, resolve_flows,
+    DEMAND_UNIFORM, DEMAND_BYTES, flow_demand_weights,
 )
 from .vector_throughput import (
     MonteCarloThroughput, batched_max_min, max_min_rates,
@@ -41,7 +42,11 @@ from .tracer import (
 )
 from .hlo_flows import (
     CollectiveOp, extract_collectives, summarize, collectives_to_flows,
-    shape_bytes, CollectiveSummary, EdgeClassCounts,
+    shape_bytes, CollectiveSummary, EdgeClassCounts, wire_and_operand,
+)
+from .llm_workload import (
+    LlmJobSpec, llm_collective_ops, llm_flows, llm_workload,
+    paper_testbed_llm_workload, multipod_llm_workload,
 )
 from .placement import (
     static_route_assignment, topology_aware_ring, ring_edge_stats,
@@ -54,13 +59,14 @@ __all__ = [
     "nic_ip", "server_name",
     "HOST_TO_LEAF", "LEAF_TO_SPINE", "SPINE_TO_LEAF", "LEAF_TO_HOST",
     "Flow", "FiveTuple", "PairSpec", "WorkloadDescription", "synthesize_flows",
-    "bipartite_pairs",
+    "bipartite_pairs", "workload_from_flows",
     "EcmpRouting", "StaticRouting", "RoutingPolicy", "Forwarder", "ecmp_hash",
     "device_seed", "flow_hash_fields", "flow_fields_matrix",
     "FIELDS_5TUPLE", "FIELDS_VXLAN", "FIELDS_IP_PAIR",
     "CompiledFabric", "compile_fabric",
     "VectorTraceResult", "MonteCarloFim", "simulate_paths", "fim_from_counts",
     "fim_vector", "monte_carlo_fim", "resolve_flows",
+    "DEMAND_UNIFORM", "DEMAND_BYTES", "flow_demand_weights",
     "MonteCarloThroughput", "batched_max_min", "max_min_rates",
     "flow_rates_from_flowlets", "pair_rate_matrix", "throughput_from_result",
     "monte_carlo_throughput",
@@ -71,7 +77,9 @@ __all__ = [
     "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",
     "DeviceChannel", "ADHOC", "PERSISTENT", "auto_processes",
     "CollectiveOp", "extract_collectives", "summarize", "collectives_to_flows",
-    "shape_bytes", "CollectiveSummary", "EdgeClassCounts",
+    "shape_bytes", "CollectiveSummary", "EdgeClassCounts", "wire_and_operand",
+    "LlmJobSpec", "llm_collective_ops", "llm_flows", "llm_workload",
+    "paper_testbed_llm_workload", "multipod_llm_workload",
     "static_route_assignment", "topology_aware_ring", "ring_edge_stats",
     "balanced_port_spread",
     "analyze_paths", "PathReport",

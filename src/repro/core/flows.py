@@ -53,11 +53,19 @@ class Flow:
 
 @dataclasses.dataclass(frozen=True, slots=True)
 class PairSpec:
-    """One (s, d) communication pair with ``f`` flows (paper Alg. 1 input)."""
+    """One (s, d) communication pair with ``f`` flows (paper Alg. 1 input).
+
+    ``bytes_per_flow`` optionally pins the volume of this pair's flows:
+    the paper's workload description names flow *volumes* as well as
+    pairs, and real LLM collectives are heavily non-uniform (a DP
+    gradient all-reduce is ~9 orders of magnitude heavier than a
+    barrier).  ``None`` defers to the ``synthesize_flows`` default.
+    """
 
     src: str
     dst: str
     num_flows: int
+    bytes_per_flow: int | None = None
 
 
 @dataclasses.dataclass(slots=True)
@@ -70,6 +78,13 @@ class WorkloadDescription:
     @property
     def total_flows(self) -> int:
         return sum(p.num_flows for p in self.pairs)
+
+    @property
+    def total_bytes(self) -> int:
+        """Declared volume over all pairs.  Pairs without an explicit
+        ``bytes_per_flow`` spec count as 0 — the description only knows
+        what it declares (a synthesize-time default is not visible here)."""
+        return sum(p.num_flows * (p.bytes_per_flow or 0) for p in self.pairs)
 
     def filter(self, flows: Iterable[Flow]) -> list[Flow]:
         """Keep only flows relevant to this workload (paper Alg. 1 line 7)."""
@@ -96,10 +111,16 @@ def synthesize_flows(
     5-tuple per flow.  Flows for a pair are spread round-robin over the
     (src NIC x dst NIC) combinations — each NIC has its own IP — and get
     distinct source ports, which is exactly the entropy ECMP hashes over.
+
+    ``bytes_per_flow`` is the global default volume; a pair carrying its
+    own ``PairSpec.bytes_per_flow`` overrides it, so heterogeneous-volume
+    workloads are expressible from the description alone.
     """
     flows: list[Flow] = []
     fid = itertools.count()
     for pair in workload.pairs:
+        pair_bytes = (pair.bytes_per_flow if pair.bytes_per_flow is not None
+                      else bytes_per_flow)
         nic_combos = [
             (s_nic, d_nic)
             for s_nic in range(nics_per_server)
@@ -120,22 +141,73 @@ def synthesize_flows(
                     src=pair.src,
                     dst=pair.dst,
                     tuple5=t5,
-                    bytes=bytes_per_flow,
+                    bytes=pair_bytes,
                 )
             )
     return flows
 
 
 def bipartite_pairs(
-    rack_a: Sequence[str], rack_b: Sequence[str], flows_per_pair: int
+    rack_a: Sequence[str],
+    rack_b: Sequence[str],
+    flows_per_pair: int,
+    *,
+    bytes_per_flow: int | Sequence[int] | None = None,
 ) -> WorkloadDescription:
     """The paper's Fig. 2(b) bipartite pattern: server i in rack A exchanges
     traffic with server i in rack B, both directions, saturating the
     cross-rack links.  16 directed pairs x 16 flows = 256 flows on the
-    paper testbed."""
+    paper testbed.
+
+    ``bytes_per_flow`` optionally sets flow volumes: a scalar applies to
+    every pair, a sequence gives server-pair ``i`` (both directions) its
+    own volume — the bipartite + heterogeneous-volume scenario.
+    """
     assert len(rack_a) == len(rack_b)
+    if isinstance(bytes_per_flow, (str, bytes)):
+        raise TypeError(
+            f"bytes_per_flow must be an int or a sequence of ints, "
+            f"got {bytes_per_flow!r}")
+    if bytes_per_flow is None:
+        per_pair: list[int | None] = [None] * len(rack_a)
+    else:
+        try:
+            items = iter(bytes_per_flow)
+        except TypeError:   # scalar, including numpy integer scalars
+            per_pair = [int(bytes_per_flow)] * len(rack_a)
+        else:               # element errors propagate with their own message
+            per_pair = [int(v) for v in items]
+        if len(per_pair) != len(rack_a):
+            raise ValueError(
+                f"bytes_per_flow has {len(per_pair)} entries for "
+                f"{len(rack_a)} server pairs")
     pairs = []
-    for a, b in zip(rack_a, rack_b):
-        pairs.append(PairSpec(a, b, flows_per_pair))
-        pairs.append(PairSpec(b, a, flows_per_pair))
+    for (a, b), volume in zip(zip(rack_a, rack_b), per_pair):
+        pairs.append(PairSpec(a, b, flows_per_pair, bytes_per_flow=volume))
+        pairs.append(PairSpec(b, a, flows_per_pair, bytes_per_flow=volume))
+    return WorkloadDescription(pairs=pairs)
+
+
+def workload_from_flows(flows: Iterable[Flow]) -> WorkloadDescription:
+    """Recover the paper-Step-(1) description from a concrete flow list
+    (e.g. the HLO-derived flows of ``core/llm_workload.py``): pairs in
+    first-seen order, per-pair flow counts, and per-pair byte specs.
+
+    A pair whose flows carry different volumes (one pair serving both an
+    all-reduce ring edge and an all-to-all edge) is summarized by its
+    *mean* bytes per flow — the description is per-pair granular; keep
+    the explicit flow list when exact per-flow volumes matter.
+    """
+    counts: dict[tuple[str, str], int] = {}
+    volumes: dict[tuple[str, str], int] = {}
+    for f in flows:
+        key = (f.src, f.dst)
+        counts[key] = counts.get(key, 0) + 1
+        volumes[key] = volumes.get(key, 0) + f.bytes
+    # always pin the spec (0 stays 0): leaving an all-zero pair at None
+    # would let a synthesize-time default silently inflate it
+    pairs = [
+        PairSpec(src, dst, n, bytes_per_flow=round(volumes[(src, dst)] / n))
+        for (src, dst), n in counts.items()
+    ]
     return WorkloadDescription(pairs=pairs)

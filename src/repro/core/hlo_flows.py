@@ -209,12 +209,15 @@ class CollectiveOp:
         return self.wire_bytes * self.multiplier
 
 
-def _wire_and_operand(kind: str, result_bytes: int, n: int) -> tuple[int, int]:
-    """Per-device (wire_bytes, operand_bytes) under ring algorithms."""
+def wire_and_operand(kind: str, result_bytes: int, n: int) -> tuple[int, int]:
+    """Per-device (wire_bytes, operand_bytes) under ring algorithms.
+
+    Public byte model shared with synthetic collective generators
+    (``core/llm_workload.py``)."""
+    if kind not in _COLLECTIVES:
+        raise ValueError(kind)
     if n <= 1:
-        # still report operand bytes for bookkeeping
-        if kind == "reduce-scatter":
-            return 0, result_bytes
+        # nothing on the wire; still report operand bytes for bookkeeping
         return 0, result_bytes
     if kind == "all-reduce":
         return int(2 * (n - 1) / n * result_bytes), result_bytes
@@ -225,9 +228,8 @@ def _wire_and_operand(kind: str, result_bytes: int, n: int) -> tuple[int, int]:
         return (n - 1) * result_bytes, operand
     if kind in ("all-to-all", "ragged-all-to-all"):
         return int((n - 1) / n * result_bytes), result_bytes
-    if kind == "collective-permute":
-        return result_bytes, result_bytes
-    raise ValueError(kind)
+    # collective-permute: every pair moves the full buffer
+    return result_bytes, result_bytes
 
 
 def extract_collectives(hlo_text: str) -> list[CollectiveOp]:
@@ -262,7 +264,7 @@ def extract_collectives(hlo_text: str) -> list[CollectiveOp]:
             wire, operand = (result_bytes, result_bytes) if pairs else (0, result_bytes)
         else:
             n = max((len(g) for g in groups), default=1)
-            wire, operand = _wire_and_operand(kind, result_bytes, n)
+            wire, operand = wire_and_operand(kind, result_bytes, n)
         chan = _CHANNEL_RE.search(line)
         ops.append(
             CollectiveOp(

@@ -59,6 +59,37 @@ def resolve_flows(
 EXACT = "exact"    # splitmix64 over CRC32 fields == core/ecmp.py bit-for-bit
 MURMUR = "murmur"  # kernels/flowhash murmur3 (TPU bulk_hash path)
 
+DEMAND_UNIFORM = "uniform"  # every flow weighs 1 (the PR 1-3 behaviour)
+DEMAND_BYTES = "bytes"      # flows weigh their wire bytes (mean-normalized)
+
+
+def flow_demand_weights(flows: Sequence[Flow], demand_mode: str) -> np.ndarray:
+    """(N,) strictly positive per-flow demand weights.
+
+    ``"uniform"`` is all-ones — the historical unit-demand model.
+    ``"bytes"`` weighs each flow by ``Flow.bytes``, normalized to mean 1
+    so weighted link loads stay magnitude-comparable with unweighted
+    counts (total demand is N either way, FIM is scale-invariant
+    regardless).  All-equal bytes — including the all-zero fallback —
+    return exact ones, so ``demand_mode="bytes"`` on a homogeneous
+    workload is bit-identical to ``"uniform"``.  Zero-byte flows inside
+    a heterogeneous workload (barriers, control traffic) are floored at
+    1 byte: they still exist on the wire and the max-min fill requires
+    strictly positive demand.
+    """
+    n = len(flows)
+    if demand_mode == DEMAND_UNIFORM:
+        return np.ones(n)
+    if demand_mode != DEMAND_BYTES:
+        raise ValueError(
+            f"unknown demand_mode {demand_mode!r}; "
+            f"expected {DEMAND_UNIFORM!r} or {DEMAND_BYTES!r}")
+    b = np.array([f.bytes for f in flows], np.float64)
+    if n == 0 or (b == b[0]).all():
+        return np.ones(n)
+    b = np.maximum(b, 1.0)
+    return b / b.mean()
+
 _M1 = np.uint64(0xBF58476D1CE4E5B9)
 _M2 = np.uint64(0x94D049BB133111EB)
 _INIT = np.uint64(HASH_INIT)
@@ -119,10 +150,18 @@ class VectorTraceResult:
     Multi-path strategies (PRIME-style spraying) emit more tensor columns
     than there are flows: each column is a *flowlet* — ``flow_index[j]``
     names its parent flow (row into ``flows``) and ``demand[j]`` the
-    fraction of the parent's unit demand it carries (flowlet demands sum
-    to 1 per flow).  Single-path strategies leave the defaults
+    fraction of the parent's demand it carries (flowlet demands sum to 1
+    per flow).  Single-path strategies leave the defaults
     (``flow_index == arange(N)``, ``demand == 1``), and every consumer
     below degenerates to the PR-1 behaviour exactly.
+
+    ``flow_demand`` carries the *per-flow* demand weight (paper Step 1
+    names flow volumes, not just pairs): ``demand_mode="bytes"`` derives
+    it from ``Flow.bytes`` normalized to mean 1.  It composes
+    multiplicatively with the flowlet fractions — a column's effective
+    weight is ``flow_demand[flow_index[j]] * demand[j]``
+    (``column_weights``) — so a sprayed elephant's flowlets each carry
+    1/K of the elephant's weight, not of a unit.
     """
 
     compiled: CompiledFabric
@@ -132,6 +171,7 @@ class VectorTraceResult:
     flow_index: np.ndarray | None = None   # (Nf,) parent-flow row per column
     demand: np.ndarray | None = None       # (Nf,) demand fraction per column
     strategy: str = "ecmp"
+    flow_demand: np.ndarray | None = None  # (N,) per-flow demand weight
 
     def __post_init__(self):
         nf = self.link_ids.shape[1]
@@ -139,6 +179,8 @@ class VectorTraceResult:
             self.flow_index = np.arange(nf, dtype=np.int32)
         if self.demand is None:
             self.demand = np.ones(nf)
+        if self.flow_demand is None:
+            self.flow_demand = np.ones(len(self.flows))
 
     @property
     def num_flows(self) -> int:
@@ -182,22 +224,33 @@ class VectorTraceResult:
             out[fid].append([links[i] for i in ids[:, j] if i >= 0])
         return out
 
+    def column_weights(self) -> np.ndarray:
+        """(Nf,) effective demand per tensor column: the parent flow's
+        ``flow_demand`` times the column's flowlet fraction.  Uniform
+        flow demand short-circuits to ``demand`` itself so the
+        single-path / unit-demand fast paths stay bit-identical."""
+        if (self.flow_demand == 1.0).all():
+            return self.demand
+        return self.flow_demand[self.flow_index] * self.demand
+
     def link_flow_counts(self) -> np.ndarray:
         """(S, L) flow load per link per seed — one bincount, no dicts.
 
-        Flowlets contribute their ``demand`` fraction, so a sprayed flow
-        still adds up to 1 unit per layer crossing and FIM stays
-        comparable across strategies; uniform unit demand keeps the exact
-        integer counts of the single-path engine.
+        Columns contribute their effective demand (``column_weights``):
+        a sprayed flow still adds up to its ``flow_demand`` per layer
+        crossing, total load per layer is demand-invariant across
+        strategies, and uniform unit demand keeps the exact integer
+        counts of the single-path engine.
         """
         L, S = self.compiled.num_links, self.num_seeds
         ids = self.link_ids                      # (H, Nf, S)
         offset = np.arange(S, dtype=np.int64) * L
         keep = ids >= 0
         flat = (ids.astype(np.int64) + offset)[keep]
-        if (self.demand == 1.0).all():
+        weights = self.column_weights()
+        if (weights == 1.0).all():
             return np.bincount(flat, minlength=S * L).reshape(S, L)
-        w = np.broadcast_to(self.demand[None, :, None], ids.shape)[keep]
+        w = np.broadcast_to(weights[None, :, None], ids.shape)[keep]
         return np.bincount(flat, weights=w, minlength=S * L).reshape(S, L)
 
 
@@ -275,6 +328,7 @@ def simulate_paths(
     max_hops: int = 16,
     field_matrix: np.ndarray | None = None,
     strategy=None,
+    demand_mode: str = DEMAND_UNIFORM,
 ) -> VectorTraceResult:
     """Walk every flow through the fabric under every seed, vectorized.
 
@@ -284,6 +338,12 @@ def simulate_paths(
     or a ``RoutingStrategy`` instance, and routes the whole simulation
     through its vectorized implementation instead (the result may carry
     flowlet columns — see ``VectorTraceResult``).
+
+    ``demand_mode`` selects the flow demand model: ``"uniform"`` (every
+    flow weighs 1) or ``"bytes"`` (flows weigh their ``Flow.bytes``, see
+    ``flow_demand_weights``), which downstream FIM / max-min consumers
+    pick up from ``VectorTraceResult.flow_demand``.  Strategies may also
+    *route* on it — congestion-aware places heavy flows first.
 
     ``field_matrix`` optionally supplies precomputed ``flow_fields_matrix``
     output so repeated sweeps over the same flow table skip the per-flow
@@ -296,9 +356,17 @@ def simulate_paths(
         raise ValueError("simulate_paths needs at least one flow")
     if strategy is not None:
         from .strategies import resolve_strategy
+        # demand_mode is only forwarded when it actually asks for
+        # something: custom strategies registered against the pre-demand
+        # route() signature keep working under the default uniform model,
+        # and a non-uniform request against one fails loudly (TypeError)
+        # instead of silently dropping the weights
+        extra = ({} if demand_mode == DEMAND_UNIFORM
+                 else {"demand_mode": demand_mode})
         return resolve_strategy(strategy).route(
             comp, flows, seeds_u64, fields=fields, hash_backend=hash_backend,
-            max_hops=max_hops, field_matrix=field_matrix)
+            max_hops=max_hops, field_matrix=field_matrix, **extra)
+    flow_demand = flow_demand_weights(flows, demand_mode)
     field_mat = (field_matrix if field_matrix is not None
                  else flow_fields_matrix(flows, fields))  # (N, F) uint64
     src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
@@ -307,7 +375,8 @@ def simulate_paths(
         hash_backend=hash_backend, max_hops=max_hops,
         describe=lambda n: f"flow {flows[n].flow_id}")
     return VectorTraceResult(
-        compiled=comp, flows=flows, seeds=seeds_u64, link_ids=link_ids)
+        compiled=comp, flows=flows, seeds=seeds_u64, link_ids=link_ids,
+        flow_demand=flow_demand)
 
 
 # ---------------------------------------------------------------------------
@@ -424,18 +493,21 @@ def monte_carlo_fim(
     layers: Sequence[str] | None = None,
     only_used_leaves: bool = False,
     strategy=None,
+    demand_mode: str = DEMAND_UNIFORM,
 ) -> MonteCarloFim:
     """FIM distribution of a routing strategy across a hash-seed sweep.
 
     ``workload`` may be a ``WorkloadDescription`` (flows are synthesized
     the standard way, NIC count inferred from the fabric) or an explicit
-    flow list.  ``strategy`` follows the ``simulate_paths`` contract
-    (default: per-flow ECMP).
+    flow list.  ``strategy`` and ``demand_mode`` follow the
+    ``simulate_paths`` contract (default: per-flow ECMP, unit demand;
+    ``demand_mode="bytes"`` makes the FIM byte-weighted).
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
-                         hash_backend=hash_backend, strategy=strategy)
+                         hash_backend=hash_backend, strategy=strategy,
+                         demand_mode=demand_mode)
     agg, per_layer = fim_from_counts(
         res.link_flow_counts(), comp,
         layers=layers, only_used_leaves=only_used_leaves)

@@ -46,7 +46,9 @@ from .compile_fabric import CompiledFabric, compile_fabric
 from .ecmp import FIELDS_5TUPLE
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription
-from .vector_sim import EXACT, VectorTraceResult, resolve_flows, simulate_paths
+from .vector_sim import (
+    DEMAND_UNIFORM, EXACT, VectorTraceResult, resolve_flows, simulate_paths,
+)
 
 # Seeds per cache block: per-cell state is ~5 arrays of seed_block * L
 # float64, which stays L2-resident for typical fabrics (L ~ a few hundred).
@@ -320,11 +322,17 @@ def batched_max_min(
 
 def max_min_rates(result: VectorTraceResult) -> np.ndarray:
     """``(Nf, S)`` max-min rates for every tensor column (flowlet) under
-    every traced seed.  Single-path results: one column per flow, the
-    PR-2 behaviour exactly.  Multi-path results: flowlet columns carry
-    their demand fractions as max-min weights; aggregate per parent flow
-    with ``flow_rates_from_flowlets``."""
-    w = None if (result.demand == 1.0).all() else result.demand
+    every traced seed.  Single-path unit-demand results: one column per
+    flow, the PR-2 behaviour exactly.  Otherwise every column carries
+    its *effective* demand — the parent flow's ``flow_demand`` times the
+    flowlet fraction (``column_weights``) — as its max-min weight, so a
+    byte-weighted elephant claims share proportional to its volume; a
+    plain ``result.demand`` here would silently revert every flow to
+    unit demand.  Aggregate per parent flow with
+    ``flow_rates_from_flowlets``."""
+    w = result.column_weights()
+    if (w == 1.0).all():
+        w = None
     return batched_max_min(result.link_ids, result.compiled.link_gbps,
                            assume_unique=True, weights=w)
 
@@ -434,6 +442,7 @@ def monte_carlo_throughput(
     hash_backend: str = EXACT,
     field_matrix: np.ndarray | None = None,
     strategy=None,
+    demand_mode: str = DEMAND_UNIFORM,
 ) -> MonteCarloThroughput:
     """Max-min throughput distribution of a routing strategy across a
     seed sweep.
@@ -441,12 +450,13 @@ def monte_carlo_throughput(
     ``workload`` may be a ``WorkloadDescription`` (flows synthesized the
     standard way, NIC count inferred from the fabric) or an explicit flow
     list — the same front-end contract as ``monte_carlo_fim``.
-    ``strategy`` follows the ``simulate_paths`` contract (default:
-    per-flow ECMP).
+    ``strategy`` and ``demand_mode`` follow the ``simulate_paths``
+    contract (default: per-flow ECMP, unit demand;
+    ``demand_mode="bytes"`` allocates weighted max-min shares).
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
                          hash_backend=hash_backend, field_matrix=field_matrix,
-                         strategy=strategy)
+                         strategy=strategy, demand_mode=demand_mode)
     return throughput_from_result(res)

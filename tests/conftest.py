@@ -48,6 +48,35 @@ def paper_traced_seed7(paper_setup):
     return FlowTracer(fab, EcmpRouting(fab, seed=7), wl, flows).trace()
 
 
+def weighted_max_min_ref(paths: dict[int, list[int]], caps: list[float],
+                         w: dict[int, float]) -> dict[int, float]:
+    """Readable scalar weighted progressive filling, the shared reference
+    for the differential tests (test_strategies / test_demand): saturate
+    the link with the smallest residual/sum-of-active-weights, freeze its
+    flows at ``w_f * share``, repeat."""
+    active = set(paths)
+    residual = dict(enumerate(caps))
+    rate: dict[int, float] = {}
+    while active:
+        shares = {}
+        for link, res in residual.items():
+            tot = sum(w[f] for f in active if link in paths[f])
+            if tot > 0:
+                shares[link] = res / tot
+        if not shares:
+            for f in active:
+                rate[f] = float("inf")
+            break
+        bottleneck = min(shares, key=lambda link: shares[link])
+        share = shares[bottleneck]
+        for f in [f for f in active if bottleneck in paths[f]]:
+            rate[f] = w[f] * share
+            for link in paths[f]:
+                residual[link] -= w[f] * share
+            active.remove(f)
+    return rate
+
+
 @pytest.fixture(scope="session")
 def multipod_small():
     """A downscaled 2-pod DCN fabric + inter-pod bipartite workload."""

@@ -8,7 +8,7 @@ import json
 import pytest
 
 from benchmarks.check_regression import (
-    SKIP_ENV, compare, main, shape_key, timed_rows,
+    SKIP_ENV, compare, main, orphaned_rows, shape_key, timed_rows,
 )
 
 
@@ -144,3 +144,32 @@ def test_threshold_boundary(ratio, fires):
     new = _payload([_row("b", 1000.0 * ratio, seeds=8)])
     regressions, _ = compare(old, new)
     assert bool(regressions) == fires
+
+
+def test_orphaned_rows_listed():
+    """A baseline row whose bench was renamed or reshaped guards nothing
+    — it must be surfaced, not silently skipped."""
+    old = _payload([_row("kept", 100.0, seeds=8),
+                    _row("renamed_away", 100.0, seeds=8),
+                    _row("reshaped", 100.0, seeds=1024)])
+    new = _payload([_row("kept", 110.0, seeds=8),
+                    _row("reshaped", 100.0, seeds=8),
+                    _row("brand_new", 50.0, seeds=8)])
+    orphans = orphaned_rows(old, new)
+    assert [key[0] for key in orphans] == ["renamed_away", "reshaped"]
+    # derived-only baseline rows are not orphans (they never guarded)
+    old_derived = _payload([_row("derived_only", 0.0)])
+    assert orphaned_rows(old_derived, new) == []
+
+
+def test_main_prints_orphans_without_failing(tmp_path, monkeypatch, capsys):
+    monkeypatch.delenv(SKIP_ENV, raising=False)
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_payload([_row("kept", 100.0, seeds=8),
+                                        _row("gone", 100.0, seeds=8)])))
+    new.write_text(json.dumps(_payload([_row("kept", 110.0, seeds=8)])))
+    assert main(["--old", str(old), "--new", str(new)]) == 0
+    out = capsys.readouterr().out
+    assert "ORPHANED gone" in out
+    assert "refresh the baseline" in out

@@ -11,6 +11,7 @@ than hashed ECMP."""
 import numpy as np
 import pytest
 from _propcheck import given, settings, strategies as st
+from conftest import weighted_max_min_ref
 
 from repro.core import (
     CongestionAware, EcmpStrategy, PrimeSpraying, RoutingStrategy,
@@ -216,34 +217,6 @@ def test_register_custom_strategy():
 # ---------------------------------------------------------------------------
 
 
-def _weighted_max_min_ref(paths: dict[int, list[int]], caps: list[float],
-                          w: dict[int, float]) -> dict[int, float]:
-    """Readable scalar weighted progressive filling: saturate the link
-    with the smallest residual/sum-of-active-weights, freeze its flows at
-    ``w_f * share``, repeat."""
-    active = set(paths)
-    residual = {i: c for i, c in enumerate(caps)}
-    rate: dict[int, float] = {}
-    while active:
-        shares = {}
-        for link, res in residual.items():
-            tot = sum(w[f] for f in active if link in paths[f])
-            if tot > 0:
-                shares[link] = res / tot
-        if not shares:
-            for f in active:
-                rate[f] = float("inf")
-            break
-        bottleneck = min(shares, key=lambda l: shares[l])
-        share = shares[bottleneck]
-        for f in [f for f in active if bottleneck in paths[f]]:
-            rate[f] = w[f] * share
-            for link in paths[f]:
-                residual[link] -= w[f] * share
-            active.remove(f)
-    return rate
-
-
 @given(st.integers(2, 6), st.integers(2, 8), st.integers(0, 2**31))
 @settings(max_examples=15, deadline=None)
 def test_weighted_fill_matches_scalar_reference(n_links, n_flows, rngseed):
@@ -260,8 +233,8 @@ def test_weighted_fill_matches_scalar_reference(n_links, n_flows, rngseed):
         for j in range(n_flows):
             hop_ids = [int(i) for i in ids[:, j, s] if i >= 0]
             paths[j] = list(dict.fromkeys(hop_ids))
-        ref = _weighted_max_min_ref(paths, list(caps),
-                                    {j: weights[j] for j in range(n_flows)})
+        ref = weighted_max_min_ref(paths, list(caps),
+                                   {j: weights[j] for j in range(n_flows)})
         for j in range(n_flows):
             if np.isinf(ref[j]):
                 assert np.isinf(rates[j, s])
