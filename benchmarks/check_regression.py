@@ -37,11 +37,18 @@ SKIP_ENV = "BENCH_REGRESSION_SKIP"
 
 
 def shape_key(payload: dict, row: dict) -> tuple:
-    """Identity of a benchmark measurement: bench row + run shape."""
+    """Identity of a benchmark measurement: bench row + run shape.
+
+    The ``BENCH_SEEDS`` override is read from the row itself when
+    present (``benchmarks/run.py`` stamps it per row, because a subset
+    run carries other benches' rows over from an earlier run that may
+    have used a different override) and falls back to the payload-level
+    field for pre-stamp history files."""
     metrics = row.get("metrics", {})
     return (
         row.get("name"),
-        payload.get("bench_seeds_override"),
+        row.get("bench_seeds_override",
+                payload.get("bench_seeds_override")),
         metrics.get("seeds"),
         metrics.get("flows"),
     )

@@ -15,6 +15,14 @@ Unweighted FIM says "how evenly are *flows* spread"; weighted FIM says
 link, the second story is much worse than the first, which is exactly
 the delta the ``*_fim_delta`` rows report.
 
+The ``*_goodput_gbps`` rows add the other side of the spraying trade
+(core/reordering.py): under a reordering-intolerant transport, full
+spraying taxes every flow's goodput, while demand-aware elephant-only
+spraying (``prime_spray_elephant``: split only >= 64 MiB flows,
+volume-proportional K) keeps near-spray *byte*-FIM — the elephants
+carry the bytes — and recovers most of the per-flow goodput, because
+the mice never leave their ECMP paths.
+
 Rows are emitted *derived-only* (``us_per_call=0``, median-of-repeats
 timings inside the derived string as ``sim_ms``/``fill_ms``): these
 composite-scenario timings swing ~2x under scheduler noise at smoke
@@ -28,17 +36,24 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import (
-    DEMAND_BYTES, DEMAND_UNIFORM, FIELDS_5TUPLE, CongestionAware,
-    EcmpStrategy, PrimeSpraying, build_multipod_fabric, build_paper_testbed,
-    compile_fabric, fim_from_counts, flow_fields_matrix,
+    DEMAND_BYTES, DEMAND_UNIFORM, ELEPHANT_MIN_BYTES, FIELDS_5TUPLE,
+    CongestionAware, EcmpStrategy, PrimeSpraying, build_multipod_fabric,
+    build_paper_testbed, compile_fabric, fim_from_counts, flow_fields_matrix,
     multipod_llm_workload, paper_testbed_llm_workload, simulate_paths,
     throughput_from_result,
 )
 from .common import bench_seeds, emit, timeit
 
+# reordering cost model for the goodput columns: the reordering-
+# intolerant extreme, where the spray-vs-elephant contrast is starkest
+TRANSPORT = "roce-nack"
+
 STRATEGY_MATRIX = [
     ("ecmp", EcmpStrategy),
     ("prime_spray", lambda: PrimeSpraying(flowlets=8)),
+    ("prime_spray_elephant",
+     lambda: PrimeSpraying(flowlets=8, min_bytes=ELEPHANT_MIN_BYTES,
+                           volume_k=True)),
     ("congestion", CongestionAware),
 ]
 
@@ -82,6 +97,19 @@ def run() -> None:
                      f"mean={fims.mean():.1f} p95={np.percentile(fims, 95):.1f} "
                      f"sim_ms={sim_elapsed * 1e3:.1f} "
                      f"seeds={num_seeds} flows={len(flows)} gbytes={gb:.1f}")
+                if demand_mode == DEMAND_UNIFORM:
+                    # the goodput story runs on per-flow-fair rates (RoCE
+                    # max-min is per-flow, volumes drive only the spray
+                    # decision): full spray pays the reordering tax on
+                    # every flow, elephant-only spraying leaves the mice
+                    # at efficiency 1
+                    tp = throughput_from_result(res, transport=TRANSPORT)
+                    emit(f"hetero_{scen_tag}_{tag}_goodput_gbps", 0.0,
+                         f"rate={tp.rates.mean():.2f} "
+                         f"goodput={tp.goodput.mean():.2f} "
+                         f"eff={tp.efficiency.mean():.3f} "
+                         f"transport={TRANSPORT} "
+                         f"seeds={num_seeds} flows={len(flows)}")
                 if demand_mode == DEMAND_BYTES:
                     tp_elapsed = timeit(
                         lambda: state.update(

@@ -34,8 +34,17 @@ from .vector_throughput import (
 from .strategies import (
     RoutingStrategy, EcmpStrategy, PrimeSpraying, CongestionAware,
     register_strategy, resolve_strategy, available_strategies,
+    ELEPHANT_MIN_BYTES,
 )
-from .fim import fim, per_layer_fim, link_flow_counts, max_min_throughput, per_pair_throughput
+from .reordering import (
+    TransportProfile, IDEAL, ROCE_NACK, STRACK,
+    register_transport, resolve_transport, available_transports,
+    flowlet_exposure, reordering_efficiency,
+)
+from .fim import (
+    fim, per_layer_fim, link_flow_counts, max_min_throughput,
+    per_pair_throughput, layer_load_stats, LayerLoadStats,
+)
 from .tracer import (
     FlowTracer, TraceResult, LatencyModel, ConnectionManager, DeviceChannel,
     ADHOC, PERSISTENT, auto_processes,
@@ -72,8 +81,12 @@ __all__ = [
     "monte_carlo_throughput",
     "RoutingStrategy", "EcmpStrategy", "PrimeSpraying", "CongestionAware",
     "register_strategy", "resolve_strategy", "available_strategies",
+    "ELEPHANT_MIN_BYTES",
+    "TransportProfile", "IDEAL", "ROCE_NACK", "STRACK",
+    "register_transport", "resolve_transport", "available_transports",
+    "flowlet_exposure", "reordering_efficiency",
     "fim", "per_layer_fim", "link_flow_counts", "max_min_throughput",
-    "per_pair_throughput",
+    "per_pair_throughput", "layer_load_stats", "LayerLoadStats",
     "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",
     "DeviceChannel", "ADHOC", "PERSISTENT", "auto_processes",
     "CollectiveOp", "extract_collectives", "summarize", "collectives_to_flows",

@@ -16,6 +16,7 @@ Section I).  Per-pair throughput is the sum over the pair's flows.
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from collections import defaultdict
 from collections.abc import Mapping, Sequence
@@ -64,6 +65,58 @@ def fim(
     return sum(v * n for v, n in values.values()) / total_links
 
 
+@dataclasses.dataclass(frozen=True)
+class LayerLoadStats:
+    """One layer's link-load aggregate — the single source both the FIM
+    computations and the path report (core/report.py) read, so per-link
+    counts, totals, ideals, and MAPE can never drift apart."""
+
+    link_counts: dict[str, int]   # every participating link, incl. idle
+    total: int                    # sum of counts over the layer
+    n_links: int
+    ideal: float                  # total / n_links
+    fim_pct: float                # MAPE over the layer's links
+
+
+def layer_load_stats(
+    paths: Mapping[int, Path],
+    fabric: Fabric,
+    *,
+    layers: Sequence[str] | None = None,
+    only_used_leaves: bool = False,
+) -> dict[str, LayerLoadStats]:
+    """Per-layer load stats.  Layers with zero traffic are dropped, and
+    so are *empty* layers (no links — after the ``only_used_leaves``
+    filter an exercised layer can end up linkless): their ideal load is
+    undefined, so they are skipped rather than divided by zero."""
+    counts = link_flow_counts(paths)
+    used_devs: set[str] = set()
+    if only_used_leaves:
+        for p in paths.values():
+            for l in p:
+                used_devs.add(l.src)
+                used_devs.add(l.dst)
+    out: dict[str, LayerLoadStats] = {}
+    for layer in (layers or fabric.layers):
+        links = fabric.links_by_layer(layer)
+        if only_used_leaves:
+            links = [l for l in links if l.src in used_devs and l.dst in used_devs]
+        if not links:
+            continue
+        per_link = {l.name: counts.get(l.name, 0) for l in links}
+        total = sum(per_link.values())
+        if total == 0:
+            continue
+        ideal = total / len(links)
+        mape = 100.0 / len(links) * sum(
+            abs(c - ideal) / ideal for c in per_link.values()
+        )
+        out[layer] = LayerLoadStats(link_counts=per_link, total=total,
+                                    n_links=len(links), ideal=ideal,
+                                    fim_pct=mape)
+    return out
+
+
 def per_layer_fim(
     paths: Mapping[int, Path],
     fabric: Fabric,
@@ -72,29 +125,9 @@ def per_layer_fim(
     only_used_leaves: bool = False,
 ) -> dict[str, tuple[float, int]]:
     """Per-layer (FIM, n_links).  Layers with zero traffic are dropped."""
-    counts = link_flow_counts(paths)
-    used_devs: set[str] = set()
-    if only_used_leaves:
-        for p in paths.values():
-            for l in p:
-                used_devs.add(l.src)
-                used_devs.add(l.dst)
-    out: dict[str, tuple[float, int]] = {}
-    for layer in (layers or fabric.layers):
-        links = fabric.links_by_layer(layer)
-        if only_used_leaves:
-            links = [l for l in links if l.src in used_devs and l.dst in used_devs]
-        if not links:
-            continue
-        total = sum(counts.get(l.name, 0) for l in links)
-        if total == 0:
-            continue
-        ideal = total / len(links)
-        mape = 100.0 / len(links) * sum(
-            abs(counts.get(l.name, 0) - ideal) / ideal for l in links
-        )
-        out[layer] = (mape, len(links))
-    return out
+    stats = layer_load_stats(paths, fabric, layers=layers,
+                             only_used_leaves=only_used_leaves)
+    return {layer: (s.fim_pct, s.n_links) for layer, s in stats.items()}
 
 
 def max_min_throughput(paths: Mapping[int, Path]) -> dict[int, float]:

@@ -1,0 +1,188 @@
+"""Flowlet reordering cost: out-of-order exposure -> goodput efficiency.
+
+Spraying a flow over K paths trades path balance against out-of-order
+delivery (paper Section V): packets of one flow now race each other down
+paths with different residual congestion and (on irregular fabrics)
+different hop counts, and what the receiver can *use* depends on how the
+transport absorbs the resulting reordering — RoCE's go-back-N style NACK
+semantics collapse under it, while an STrack-like transport (arXiv
+2407.15266) tracks out-of-order ranges and loses little.  Until this
+module existed the simulator modeled spraying as free, so every strategy
+matrix overstated the spray win by construction.
+
+The model has two transport-independent and one transport-dependent
+stage, all vectorized over the ``(N flows, S seeds)`` Monte-Carlo grid:
+
+1. **Exposure** (``flowlet_exposure``): a dimensionless per-(flow, seed)
+   measure of how much out-of-order delivery the routing *induces*,
+   computed from the flowlet columns of a ``VectorTraceResult``:
+
+   * *path-length skew* — ``(max - min) / max(min, 1)`` of the hop
+     counts across the flow's flowlets (packets on a longer path arrive
+     structurally late);
+   * *rate dispersion* — ``(max - min) / max`` of the flowlets' max-min
+     rates per unit demand (a slow flowlet is a congested path, i.e.
+     queueing delay the fast flowlets do not see).
+
+   Both terms are exactly 0 for a single-flowlet flow, so every
+   single-path strategy (and ``K=1`` spraying) has zero exposure by
+   construction.
+
+2. **Efficiency** (``reordering_efficiency``): a ``TransportProfile``
+   maps exposure to a goodput multiplier in ``(0, 1]``::
+
+       efficiency = 1 + (1 - floor) * expm1(-alpha * exposure)
+
+   i.e. exponential decay from exactly 1.0 at zero exposure toward the
+   profile's ``floor``.  ``expm1`` keeps the zero-exposure case *bit*-
+   exact (no ``0.7 + 0.3`` float residue), which is what makes
+   "K=1 spray == ECMP including effective goodput" hold to the last ulp.
+   Efficiency is monotonically non-increasing in exposure for any valid
+   profile — property-tested in tests/test_reordering.py.
+
+3. **Goodput**: ``effective_goodput = max-min rate x efficiency``,
+   surfaced by ``throughput_from_result`` / ``monte_carlo_throughput``
+   via ``transport=`` (see core/vector_throughput.py).
+
+Three profiles ship registered: ``ideal`` (reordering is free — the
+pre-PR-5 behaviour, and the default), ``roce-nack`` (go-back-N-ish:
+steep decay, low floor) and ``strack`` (out-of-order tracking: shallow
+decay, high floor).  Register custom transports with
+``register_transport``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .vector_sim import VectorTraceResult, segment_reduce
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportProfile:
+    """Reordering tolerance of a transport: exposure -> efficiency.
+
+    ``alpha`` is the decay rate (how fast goodput erodes per unit
+    exposure) and ``floor`` the asymptotic efficiency under unbounded
+    reordering (the transport's worst case).  ``alpha=0`` or ``floor=1``
+    makes reordering free.
+    """
+
+    name: str
+    alpha: float
+    floor: float
+
+    def __post_init__(self):
+        if self.alpha < 0:
+            raise ValueError(f"alpha must be >= 0, got {self.alpha}")
+        if not 0.0 < self.floor <= 1.0:
+            raise ValueError(f"floor must be in (0, 1], got {self.floor}")
+
+
+#: reordering is free — the historical model, and the default everywhere
+IDEAL = TransportProfile("ideal", alpha=0.0, floor=1.0)
+#: go-back-N-ish RoCE NACK semantics: any reordering triggers
+#: retransmission of the whole window, goodput collapses fast
+ROCE_NACK = TransportProfile("roce-nack", alpha=3.0, floor=0.25)
+#: STrack-like out-of-order tracking (arXiv 2407.15266): the transport
+#: absorbs most reordering, mild decay with a high floor
+STRACK = TransportProfile("strack", alpha=0.6, floor=0.8)
+
+_TRANSPORTS: dict[str, TransportProfile] = {}
+
+
+def register_transport(profile: TransportProfile) -> TransportProfile:
+    """Register ``profile`` so ``transport="name"`` resolves to it."""
+    _TRANSPORTS[profile.name] = profile
+    return profile
+
+
+def available_transports() -> list[str]:
+    return sorted(_TRANSPORTS)
+
+
+def resolve_transport(
+    transport: TransportProfile | str | None,
+) -> TransportProfile:
+    """A profile instance passes through; a name looks up the registry;
+    ``None`` means ``ideal`` (reordering-free, the historical model)."""
+    if transport is None:
+        return IDEAL
+    if isinstance(transport, TransportProfile):
+        return transport
+    if isinstance(transport, str):
+        try:
+            return _TRANSPORTS[transport]
+        except KeyError:
+            raise ValueError(
+                f"unknown transport profile {transport!r}; "
+                f"registered: {available_transports()}") from None
+    raise TypeError(
+        f"transport must be a TransportProfile, registered name, or None, "
+        f"got {type(transport).__name__}")
+
+
+for _p in (IDEAL, ROCE_NACK, STRACK):
+    register_transport(_p)
+
+
+def flowlet_exposure(
+    result: VectorTraceResult,
+    flowlet_rates: np.ndarray | None = None,
+) -> np.ndarray:
+    """(N, S) out-of-order exposure per flow per seed.
+
+    ``flowlet_rates`` is the ``(Nf, S)`` per-column max-min rate tensor
+    (``max_min_rates(result)``); passing it lets callers that already
+    ran the fill (``throughput_from_result``) avoid a second one.
+    Zero-link flowlets carry infinite max-min rates; they traverse no
+    shared queue, so they are excluded from the dispersion term (a flow
+    whose flowlets are *all* link-free disperses nothing).
+    """
+    n, s = result.num_flows, result.num_seeds
+    fi = np.asarray(result.flow_index)
+    if not result.is_multipath and fi.size == n and (
+            fi == np.arange(n)).all():
+        return np.zeros((n, s))            # single-path: no reordering
+
+    hops = result.hop_counts().astype(np.float64)                 # (Nf, S)
+    hmin = segment_reduce(hops, fi, n, np.minimum, np.inf)
+    hmax = segment_reduce(hops, fi, n, np.maximum, -np.inf)
+    skew = (hmax - hmin) / np.maximum(hmin, 1.0)
+
+    if flowlet_rates is None:
+        from .vector_throughput import max_min_rates
+        flowlet_rates = max_min_rates(result)
+    unit = flowlet_rates / result.column_weights()[:, None]
+    finite = np.isfinite(unit)
+    rmin = segment_reduce(np.where(finite, unit, np.inf), fi, n,
+                          np.minimum, np.inf)
+    rmax = segment_reduce(np.where(finite, unit, -np.inf), fi, n,
+                          np.maximum, -np.inf)
+    live = np.isfinite(rmax) & (rmax > 0)
+    dispersion = np.where(live, (rmax - np.where(live, rmin, 0.0))
+                          / np.where(live, rmax, 1.0), 0.0)
+    exposure = skew + dispersion
+    # parents with no columns (possible only through hand-built results)
+    # reorder nothing; scrub the fallback's inf/nan seeds
+    return np.where(np.isfinite(exposure), exposure, 0.0)
+
+
+def reordering_efficiency(
+    exposure: np.ndarray,
+    transport: TransportProfile | str | None = None,
+) -> np.ndarray:
+    """Goodput multiplier in ``(0, 1]`` for an exposure array.
+
+    ``1 + (1 - floor) * expm1(-alpha * exposure)``: exactly 1.0 at zero
+    exposure (``expm1(-0) == 0`` — no float residue, so unexposed flows
+    keep bit-identical goodput), decaying monotonically toward
+    ``floor``.
+    """
+    p = resolve_transport(transport)
+    e = np.asarray(exposure, np.float64)
+    if (e < 0).any():
+        raise ValueError("exposure must be non-negative")
+    return 1.0 + (1.0 - p.floor) * np.expm1(-p.alpha * e)

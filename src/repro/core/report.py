@@ -6,11 +6,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from collections import defaultdict
 from collections.abc import Mapping, Sequence
 
 from .fabric import Fabric, Link
-from .fim import fim, link_flow_counts, per_layer_fim
+from .fim import fim, layer_load_stats
 
 Path = list[Link]
 
@@ -45,31 +44,25 @@ def analyze_paths(
     *,
     layers: Sequence[str] | None = None,
 ) -> PathReport:
-    counts = link_flow_counts(paths)
-    layer_fims = per_layer_fim(paths, fabric, layers=layers)
-    per_layer: dict[str, dict[str, int]] = defaultdict(dict)
-    ideal: dict[str, float] = {}
-    for layer, (f_val, n_links) in layer_fims.items():
-        links = fabric.links_by_layer(layer)
-        total = 0
-        for l in links:
-            c = counts.get(l.name, 0)
-            per_layer[layer][l.name] = c
-            total += c
-        ideal[layer] = total / len(links)
+    # one layer_load_stats pass carries the per-link counts, totals,
+    # ideals, and FIM together (fim.py is the single source; empty
+    # layers are guarded there), so the report cannot disagree with the
+    # metric it annotates
+    stats = layer_load_stats(paths, fabric, layers=layers)
 
-    collisions = []
-    for layer, linkmap in per_layer.items():
-        for name, c in linkmap.items():
-            if c > ideal[layer]:
-                collisions.append((name, c))
+    collisions = [
+        (name, c)
+        for s in stats.values()
+        for name, c in s.link_counts.items()
+        if c > s.ideal
+    ]
     collisions.sort(key=lambda x: -x[1])
 
     return PathReport(
         total_flows=len(paths),
-        per_layer={k: dict(v) for k, v in per_layer.items()},
-        per_layer_fim={k: v[0] for k, v in layer_fims.items()},
+        per_layer={k: dict(s.link_counts) for k, s in stats.items()},
+        per_layer_fim={k: s.fim_pct for k, s in stats.items()},
         aggregate_fim=fim(paths, fabric, layers=layers),
         collisions=collisions,
-        ideal_per_layer=ideal,
+        ideal_per_layer={k: s.ideal for k, s in stats.items()},
     )

@@ -16,7 +16,10 @@ can be evaluated under the same Monte-Carlo harness:
   decomposed into mixed-radix digits over ``parts`` and each digit rides
   as its own extra header field, so every switch's pseudo-random hash
   integrates several independently varying entropy sources.  K=1 appends
-  nothing and degenerates to ECMP exactly.
+  nothing and degenerates to ECMP exactly.  ``min_bytes`` makes the
+  spraying *demand-aware* (split only elephants, optionally with
+  volume-proportional K) — spraying is not free (core/reordering.py
+  prices the out-of-order delivery), so PRIME sprays selectively.
 * ``CongestionAware`` — greedy congestion-aware path selection in the
   spirit of Predictive Load Balancing (arXiv 2506.08132): flows are
   placed one at a time and every hop picks the candidate egress link
@@ -37,6 +40,7 @@ registered name or a strategy instance via ``strategy=``.
 
 from __future__ import annotations
 
+import warnings
 from collections.abc import Callable, Sequence
 
 import numpy as np
@@ -104,21 +108,49 @@ def _balanced_parts(k: int) -> tuple[int, ...]:
     return (k,)
 
 
+#: default elephant threshold for demand-aware spraying: 64 MiB — on the
+#: committed LLM scenarios this sprays the DP/FSDP ring elephants (which
+#: carry ~80-97% of the bytes) and leaves the MB-scale MoE shuffles and
+#: control mice on their ECMP paths
+ELEPHANT_MIN_BYTES = 64 * 1024 * 1024
+
+
 class PrimeSpraying(RoutingStrategy):
     """PRIME-style multi-part-entropy packet spraying (arXiv 2507.23012).
 
-    Each flow is split into ``flowlets`` equal-demand flowlets; flowlet
-    ``k``'s entropy label is the mixed-radix digit vector of ``k`` over
-    ``parts`` (product must equal ``flowlets``), appended to the flow's
-    hash fields as extra columns so every switch hash integrates all
-    entropy parts.  With ``flowlets=1`` no label is appended and the
-    walk is bit-identical to ``EcmpStrategy``.
+    Each flow is split into up to ``flowlets`` equal-demand flowlets;
+    flowlet ``k``'s entropy label is the mixed-radix digit vector of
+    ``k`` over ``parts`` (product must equal ``flowlets``), appended to
+    the flow's hash fields as extra columns so every switch hash
+    integrates all entropy parts.  With ``flowlets=1`` no label is
+    appended and the walk is bit-identical to ``EcmpStrategy``.
+
+    **Demand-aware spraying** (``min_bytes``): PRIME sprays adaptively,
+    not blindly — splitting a mouse buys no balance (its bytes are
+    noise) but still costs out-of-order delivery (core/reordering.py).
+    With ``min_bytes`` set, only flows with ``Flow.bytes >= min_bytes``
+    are split; the rest ride their exact per-flow ECMP path — the
+    unsprayed columns are walked *without* entropy columns, so they stay
+    bit-identical to ``EcmpStrategy`` flow by flow, and
+    ``min_bytes=inf`` degenerates to ECMP wholesale.  ``volume_k=True``
+    additionally makes K volume-proportional: ``min_bytes`` becomes the
+    target bytes *per flowlet* and each flow splits into
+    ``clip(ceil(bytes / min_bytes), 1, flowlets)`` flowlets, so a 2 GiB
+    elephant fans wide while a 100 MiB flow (at the 64 MiB default
+    target) splits in two; flows at or under one target-chunk stay
+    single-path.
+
+    ``min_bytes`` reads raw ``Flow.bytes`` — the elephant decision is a
+    property of the workload, independent of the ``demand_mode``
+    normalization used for FIM/max-min weighting.
     """
 
     name = "prime-spray"
 
     def __init__(self, flowlets: int = 8,
-                 parts: Sequence[int] | None = None):
+                 parts: Sequence[int] | None = None,
+                 min_bytes: float | None = None,
+                 volume_k: bool = False):
         if flowlets < 1:
             raise ValueError(f"flowlets must be >= 1, got {flowlets}")
         self.flowlets = int(flowlets)
@@ -130,6 +162,13 @@ class PrimeSpraying(RoutingStrategy):
             raise ValueError(
                 f"entropy parts {self.parts} do not multiply to "
                 f"{self.flowlets} flowlets")
+        if min_bytes is not None and not min_bytes > 0:
+            raise ValueError(f"min_bytes must be > 0, got {min_bytes}")
+        if volume_k and min_bytes is None:
+            raise ValueError(
+                "volume_k needs min_bytes (the target bytes per flowlet)")
+        self.min_bytes = min_bytes
+        self.volume_k = bool(volume_k)
 
     def entropy_labels(self) -> np.ndarray:
         """(K, P) uint64 mixed-radix digits, one row per flowlet."""
@@ -140,29 +179,79 @@ class PrimeSpraying(RoutingStrategy):
             k = k // np.uint64(base)
         return np.stack(cols, axis=1)
 
+    def flowlet_counts(self, flows: Sequence[Flow]) -> np.ndarray:
+        """(N,) int64 flowlets per flow under the demand-aware policy."""
+        n = len(flows)
+        if self.min_bytes is None:
+            return np.full(n, self.flowlets, np.int64)
+        b = np.array([f.bytes for f in flows], np.float64)
+        if self.volume_k:
+            # ceil, not floor: one flowlet per started min_bytes chunk,
+            # so anything over one chunk actually splits
+            with np.errstate(invalid="ignore"):   # min_bytes=inf: b/inf -> 0
+                k = np.ceil(b / self.min_bytes)
+            return np.clip(np.nan_to_num(k), 1, self.flowlets).astype(np.int64)
+        return np.where(b >= self.min_bytes, self.flowlets, 1).astype(np.int64)
+
     def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
               hash_backend=EXACT, max_hops=16, field_matrix=None,
               demand_mode=DEMAND_UNIFORM):
         field_mat = (field_matrix if field_matrix is not None
                      else flow_fields_matrix(flows, fields))
-        n, k = len(flows), self.flowlets
-        src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
-        if k > 1:
-            field_mat = np.concatenate(
-                [np.repeat(field_mat, k, axis=0),
-                 np.tile(self.entropy_labels(), (n, 1))], axis=1)
-            src_dev, dst_dev, src_key, dst_key = (
-                np.repeat(a, k) for a in (src_dev, dst_dev, src_key, dst_key))
-        flow_index = np.repeat(np.arange(n, dtype=np.int32), k)
-        link_ids = ecmp_walk(
-            comp, src_dev, dst_dev, src_key, dst_key, field_mat, seeds_u64,
-            hash_backend=hash_backend, max_hops=max_hops,
-            describe=lambda j: (f"flow {flows[int(flow_index[j])].flow_id} "
-                                f"flowlet {int(j) % k}"))
+        n = len(flows)
+        k_f = self.flowlet_counts(flows)
+        if (self.min_bytes is not None and np.isfinite(self.min_bytes)
+                and n and all(f.bytes == 0 for f in flows)):
+            # an explicit finite threshold against a volume-less workload
+            # is almost certainly a mistake: every flow stays single-path
+            # and the "spraying" comparison silently measures plain ECMP
+            warnings.warn(
+                f"{self.name}: min_bytes={self.min_bytes:g} but every "
+                f"Flow.bytes is 0 (workload carries no volumes) — no flow "
+                f"sprays, this is ECMP", stacklevel=2)
+        total = int(k_f.sum())
+        flow_index = np.repeat(np.arange(n, dtype=np.int32), k_f)
+        starts = np.concatenate(([0], np.cumsum(k_f)[:-1]))
+        local = np.arange(total, dtype=np.int64) - np.repeat(starts, k_f)
+        demand = np.repeat(1.0 / k_f, k_f)
+        endpoints = comp.flow_endpoint_ids(flows)
+        sprayed = k_f[flow_index] > 1          # per column
+
+        def walk(cols: np.ndarray, with_labels: bool) -> np.ndarray:
+            fm = field_mat[flow_index[cols]]
+            if with_labels:
+                fm = np.concatenate(
+                    [fm, self.entropy_labels()[local[cols]]], axis=1)
+            ep = tuple(a[flow_index[cols]] for a in endpoints)
+            return ecmp_walk(
+                comp, *ep, fm, seeds_u64,
+                hash_backend=hash_backend, max_hops=max_hops,
+                describe=lambda j: (
+                    f"flow {flows[int(flow_index[cols[int(j)]])].flow_id} "
+                    f"flowlet {int(local[cols[int(j)]])}"))
+
+        if sprayed.all():
+            link_ids = walk(np.arange(total), with_labels=True)
+        elif not sprayed.any():
+            # nothing crosses the elephant bar (or flowlets=1): one
+            # label-free walk, bit-identical to EcmpStrategy
+            link_ids = walk(np.arange(total), with_labels=False)
+        else:
+            # mixed: sprayed columns walk with entropy labels, unsprayed
+            # flows walk label-free (each stays on its exact ECMP path),
+            # then the two tensors interleave back into parent order
+            p_cols = np.flatnonzero(sprayed)
+            u_cols = np.flatnonzero(~sprayed)
+            p_ids = walk(p_cols, with_labels=True)
+            u_ids = walk(u_cols, with_labels=False)
+            hops = max(p_ids.shape[0], u_ids.shape[0])
+            link_ids = np.full((hops, total, len(seeds_u64)), -1, np.int32)
+            link_ids[:p_ids.shape[0], p_cols] = p_ids
+            link_ids[:u_ids.shape[0], u_cols] = u_ids
         return VectorTraceResult(
             compiled=comp, flows=list(flows), seeds=seeds_u64,
             link_ids=link_ids, flow_index=flow_index,
-            demand=np.full(n * k, 1.0 / k), strategy=self.name,
+            demand=demand, strategy=self.name,
             flow_demand=flow_demand_weights(flows, demand_mode))
 
 
@@ -313,4 +402,7 @@ def resolve_strategy(strategy: RoutingStrategy | str) -> RoutingStrategy:
 
 register_strategy("ecmp", EcmpStrategy)
 register_strategy("prime-spray", PrimeSpraying)
+register_strategy("prime-spray-elephant",
+                  lambda: PrimeSpraying(min_bytes=ELEPHANT_MIN_BYTES,
+                                        volume_k=True))
 register_strategy("congestion-aware", CongestionAware)

@@ -198,6 +198,11 @@ class VectorTraceResult:
     def is_multipath(self) -> bool:
         return self.num_flowlets != self.num_flows
 
+    def hop_counts(self) -> np.ndarray:
+        """(Nf, S) links crossed per tensor column per seed — the
+        path-length grid the reordering model's skew term reads."""
+        return (self.link_ids >= 0).sum(axis=0)
+
     def paths_for_seed(self, seed_index: int) -> dict[int, Path]:
         """Materialize one seed's paths in ``FlowTracer`` format (for
         differential testing / drop-in use with the dict-based tools).
@@ -252,6 +257,25 @@ class VectorTraceResult:
             return np.bincount(flat, minlength=S * L).reshape(S, L)
         w = np.broadcast_to(weights[None, :, None], ids.shape)[keep]
         return np.bincount(flat, weights=w, minlength=S * L).reshape(S, L)
+
+
+def segment_reduce(values: np.ndarray, fi: np.ndarray, n: int,
+                   ufunc: np.ufunc, fill: float) -> np.ndarray:
+    """Per-parent ``ufunc`` reduction over the column axis of an
+    ``(Nf, S)`` array, grouping columns by ``fi`` (their parent-flow
+    rows) into ``(n, S)``.  Parent-sorted contiguous ``fi`` — the
+    flowlet layout every built-in multi-path strategy emits — takes the
+    ``reduceat`` fast path; anything else falls back to a scatter
+    reduction seeded with ``fill``.  Shared by the flowlet->flow rate
+    aggregation (vector_throughput) and the reordering exposure model,
+    so the two can never disagree on the grouping."""
+    if fi.size and (np.diff(fi) >= 0).all():
+        starts = np.flatnonzero(np.diff(fi, prepend=-1) > 0)
+        if starts.size == n:               # every parent has >= 1 column
+            return ufunc.reduceat(values, starts, axis=0)
+    out = np.full((n, values.shape[1]), fill)
+    ufunc.at(out, fi, values)
+    return out
 
 
 def normalize_seeds(seeds: Sequence[int] | np.ndarray) -> np.ndarray:

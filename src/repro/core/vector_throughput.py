@@ -47,7 +47,8 @@ from .ecmp import FIELDS_5TUPLE
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription
 from .vector_sim import (
-    DEMAND_UNIFORM, EXACT, VectorTraceResult, resolve_flows, simulate_paths,
+    DEMAND_UNIFORM, EXACT, VectorTraceResult, resolve_flows, segment_reduce,
+    simulate_paths,
 )
 
 # Seeds per cache block: per-cell state is ~5 arrays of seed_block * L
@@ -63,13 +64,22 @@ def dedup_link_ids(link_ids: np.ndarray) -> np.ndarray:
     flow crossing the same link twice is counted (and drained) once.
     Fabric-walked paths are loop-free, but synthetic tensors (and future
     multi-path schemes) may not be.
+
+    Each hop row is compared against all earlier rows in ONE broadcast
+    (``(ids[h] == ids[:h]).any(0)``) — quadratic in H but vectorized
+    over the big (N, S) axes, which is what matters: H is capped by
+    ``max_hops`` (16) while flowlet tensors grow N into the thousands.
+    A value match against any earlier hop suffices (matching a -1 can
+    only happen when ``ids[h]`` is itself -1, which the write guard
+    excludes), so the old per-pair ``ids[g] >= 0`` masks are gone.  The
+    prescribed sort-along-hop + shift-compare rewrite was measured and
+    rejected: numpy's axis sorts cost 3-5x these compares at every
+    realistic shape (still 1.5x slower at H=128, far past any walk).
     """
     ids = np.array(link_ids, copy=True)
     for h in range(1, ids.shape[0]):
-        dup = (ids[h] == ids[0]) & (ids[0] >= 0)
-        for g in range(1, h):
-            dup |= (ids[h] == ids[g]) & (ids[g] >= 0)
-        ids[h][dup] = -1
+        dup = (ids[h] == ids[:h]).any(axis=0)
+        np.copyto(ids[h], -1, where=dup & (ids[h] >= 0))
     return ids
 
 
@@ -340,29 +350,48 @@ def max_min_rates(result: VectorTraceResult) -> np.ndarray:
 def flow_rates_from_flowlets(result: VectorTraceResult,
                              flowlet_rates: np.ndarray) -> np.ndarray:
     """Aggregate ``(Nf, S)`` flowlet rates into ``(N, S)`` per-flow rates
-    by summing columns of the same parent (``result.flow_index``)."""
+    by summing columns of the same parent (``result.flow_index``) — the
+    same segment reduction (``vector_sim.segment_reduce``) the exposure
+    model runs, so the two can never disagree on the grouping."""
     fi = result.flow_index
     if not result.is_multipath and (fi == np.arange(len(fi))).all():
         return flowlet_rates
-    if fi.size and (np.diff(fi) >= 0).all():
-        # flowlets grouped by parent (the spraying layout): segment-sum
-        starts = np.flatnonzero(np.diff(fi, prepend=-1) > 0)
-        return np.ascontiguousarray(
-            np.add.reduceat(flowlet_rates, starts, axis=0), dtype=np.float64)
-    out = np.zeros((result.num_flows, flowlet_rates.shape[1]))
-    np.add.at(out, fi, flowlet_rates)
-    return out
+    return np.ascontiguousarray(
+        segment_reduce(flowlet_rates, fi, result.num_flows, np.add, 0.0),
+        dtype=np.float64)
 
 
 @dataclasses.dataclass
 class MonteCarloThroughput:
-    """Per-flow and per-pair max-min rate distributions over a seed sweep."""
+    """Per-flow and per-pair max-min rate distributions over a seed sweep.
+
+    ``rates`` is the raw max-min allocation (what the fabric *delivers*);
+    ``goodput`` is what the transport can *use* after paying the flowlet
+    reordering cost — ``rates x efficiency`` under the ``transport``
+    profile (core/reordering.py).  Under the default ``"ideal"``
+    transport (and for any single-path strategy, whose exposure is zero)
+    ``goodput`` is bit-identical to ``rates``.
+    """
 
     seeds: np.ndarray                    # (S,)
     flows: list[Flow]
     rates: np.ndarray                    # (N, S) Gb/s per flow per seed
     pairs: list[tuple[str, str]]         # (src, dst) in first-seen order
     per_pair: np.ndarray                 # (P, S) Gb/s per pair per seed
+    transport: str = "ideal"             # reordering profile name
+    exposure: np.ndarray | None = None   # (N, S) out-of-order exposure
+    efficiency: np.ndarray | None = None  # (N, S) goodput multiplier
+    goodput: np.ndarray | None = None    # (N, S) effective Gb/s per flow
+
+    def __post_init__(self):
+        if self.exposure is None:
+            self.exposure = np.zeros_like(self.rates)
+        if self.efficiency is None:
+            self.efficiency = np.ones_like(self.rates)
+        if self.goodput is None:
+            # a copy, not an alias: in-place edits of one must never
+            # leak into the other
+            self.goodput = self.rates.copy()
 
     @property
     def num_seeds(self) -> int:
@@ -378,6 +407,7 @@ class MonteCarloThroughput:
     def summary(self) -> dict[str, dict[str, float]]:
         rows = {
             "flow_rate": self.rates,
+            "flow_goodput": self.goodput,
             "pair_total": self.per_pair,
             "pair_min": self.per_pair.min(axis=0),
             "pair_median": np.median(self.per_pair, axis=0),
@@ -419,18 +449,58 @@ def pair_rate_matrix(
     return list(pair_index), per_pair
 
 
-def throughput_from_result(result: VectorTraceResult) -> MonteCarloThroughput:
+def throughput_from_result(
+    result: VectorTraceResult,
+    *,
+    transport=None,
+    flowlet_rates: np.ndarray | None = None,
+) -> MonteCarloThroughput:
     """Rate distributions for an already-simulated ``VectorTraceResult``
     (lets callers share one ``simulate_paths`` pass between FIM and
     throughput, as ``benchmarks/fig3a_routing_comparison.py`` does).
 
     Multi-path results run the weighted fill over flowlet columns and
     aggregate rates per parent flow, so ``rates`` is always ``(N, S)``
-    over ``result.flows`` regardless of strategy."""
-    rates = flow_rates_from_flowlets(result, max_min_rates(result))
+    over ``result.flows`` regardless of strategy.
+
+    ``transport`` selects the reordering cost model (a
+    ``TransportProfile``, a registered name like ``"roce-nack"`` /
+    ``"strack"``, or ``None`` for the free ``"ideal"`` model): flowlet
+    out-of-order exposure is computed from the same fill
+    (``flowlet_exposure`` reuses the per-flowlet rates) and
+    ``goodput = rates x efficiency``.  Zero-exposure flows — every flow
+    of a single-path strategy, and every unsprayed flow of demand-aware
+    spraying — keep ``goodput`` bit-identical to ``rates``.  A profile
+    with ``alpha == 0`` or ``floor == 1`` makes every flow's efficiency
+    1 regardless of exposure, so the exposure pass is skipped outright
+    (``.exposure`` reads 0 — the pre-reordering behaviour at the
+    pre-reordering cost); request a lossy profile to get exposure
+    diagnostics.
+
+    ``flowlet_rates`` optionally supplies a precomputed
+    ``max_min_rates(result)`` tensor so callers evaluating the same
+    routed result under several transports run the progressive fill —
+    the dominant cost — once."""
+    from .reordering import (
+        flowlet_exposure, reordering_efficiency, resolve_transport,
+    )
+    profile = resolve_transport(transport)
+    if flowlet_rates is None:
+        flowlet_rates = max_min_rates(result)
+    rates = flow_rates_from_flowlets(result, flowlet_rates)
     pairs, per_pair = pair_rate_matrix(result.flows, rates)
+    if profile.alpha == 0.0 or profile.floor == 1.0:
+        return MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
+                                    rates=rates, pairs=pairs,
+                                    per_pair=per_pair,
+                                    transport=profile.name)
+    exposure = flowlet_exposure(result, flowlet_rates)
+    efficiency = reordering_efficiency(exposure, profile)
     return MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
-                                rates=rates, pairs=pairs, per_pair=per_pair)
+                                rates=rates, pairs=pairs, per_pair=per_pair,
+                                transport=profile.name, exposure=exposure,
+                                efficiency=efficiency,
+                                goodput=rates * efficiency)
 
 
 def monte_carlo_throughput(
@@ -443,6 +513,7 @@ def monte_carlo_throughput(
     field_matrix: np.ndarray | None = None,
     strategy=None,
     demand_mode: str = DEMAND_UNIFORM,
+    transport=None,
 ) -> MonteCarloThroughput:
     """Max-min throughput distribution of a routing strategy across a
     seed sweep.
@@ -452,11 +523,13 @@ def monte_carlo_throughput(
     list — the same front-end contract as ``monte_carlo_fim``.
     ``strategy`` and ``demand_mode`` follow the ``simulate_paths``
     contract (default: per-flow ECMP, unit demand;
-    ``demand_mode="bytes"`` allocates weighted max-min shares).
+    ``demand_mode="bytes"`` allocates weighted max-min shares);
+    ``transport`` the ``throughput_from_result`` contract (reordering
+    cost model for ``goodput``; default ``"ideal"`` = reordering-free).
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
                          hash_backend=hash_backend, field_matrix=field_matrix,
                          strategy=strategy, demand_mode=demand_mode)
-    return throughput_from_result(res)
+    return throughput_from_result(res, transport=transport)

@@ -173,3 +173,132 @@ def test_main_prints_orphans_without_failing(tmp_path, monkeypatch, capsys):
     out = capsys.readouterr().out
     assert "ORPHANED gone" in out
     assert "refresh the baseline" in out
+
+
+def test_results_path_anchored_to_repo_root():
+    """benchmarks/run.py must write the perf history next to the repo
+    root regardless of the CWD it is invoked from — a relative path
+    silently desyncs the regression guard."""
+    import os
+
+    import benchmarks.run as run
+
+    assert os.path.isabs(run.RESULTS_PATH)
+    repo_root = os.path.dirname(
+        os.path.dirname(os.path.abspath(run.__file__)))
+    assert run.RESULTS_PATH == os.path.join(repo_root, "BENCH_results.json")
+
+
+def test_subset_run_merges_into_existing_payload(tmp_path, monkeypatch):
+    """A subset invocation must replace only its own benches' rows and
+    carry every other bench's rows over — not wipe the history."""
+    import json as _json
+    import sys
+
+    import benchmarks.common as common
+    import benchmarks.run as run
+
+    results_path = tmp_path / "BENCH_results.json"
+    monkeypatch.setattr(run, "RESULTS_PATH", str(results_path))
+    monkeypatch.setattr(
+        run, "BENCHES",
+        {"alpha": lambda: common.emit("alpha_row", 1.0, "v=1"),
+         "beta": lambda: common.emit("beta_row", 2.0, "v=2")})
+
+    def run_main(argv):
+        monkeypatch.setattr(common, "RESULTS", [])
+        monkeypatch.setattr(run, "RESULTS", common.RESULTS)
+        monkeypatch.setattr(sys, "argv", ["run"] + argv)
+        run.main()
+        return _json.loads(results_path.read_text())
+
+    full = run_main([])
+    assert {r["name"]: r["bench"] for r in full["rows"]} == {
+        "alpha_row": "alpha", "beta_row": "beta"}
+    subset = run_main(["beta"])
+    assert {r["name"]: r["bench"] for r in subset["rows"]} == {
+        "alpha_row": "alpha", "beta_row": "beta"}   # alpha carried over
+    assert subset["benches"] == ["beta"]
+    # a re-run of a bench replaces, not duplicates, its rows
+    assert sum(r["name"] == "beta_row" for r in subset["rows"]) == 1
+
+
+def test_shape_key_prefers_row_level_override():
+    """Rows carried over from an earlier run keep the shape override
+    they were measured under, not the merging run's — a full-shape row
+    inside a smoke payload must never match a smoke baseline."""
+    payload = _payload([], override="8")
+    carried = _row("x", 1.0, seeds=8, flows=256)
+    carried["bench_seeds_override"] = None      # measured at full shape
+    assert shape_key(payload, carried) == ("x", None, 8, 256)
+    fresh = _row("x", 1.0, seeds=8, flows=256)  # pre-stamp fallback
+    assert shape_key(payload, fresh) == ("x", "8", 8, 256)
+
+
+def test_subset_run_carries_prior_errors(tmp_path, monkeypatch):
+    """Partial rows of a previously failed bench must keep their error
+    record when another bench's subset run rewrites the payload."""
+    import json as _json
+    import sys
+
+    import benchmarks.common as common
+    import benchmarks.run as run
+
+    results_path = tmp_path / "BENCH_results.json"
+    monkeypatch.setattr(run, "RESULTS_PATH", str(results_path))
+
+    def boom():
+        common.emit("beta_partial", 1.0, "v=1")
+        raise RuntimeError("bench died midway")
+
+    monkeypatch.setattr(
+        run, "BENCHES",
+        {"alpha": lambda: common.emit("alpha_row", 1.0, "v=1"),
+         "beta": boom})
+
+    def run_main(argv):
+        monkeypatch.setattr(common, "RESULTS", [])
+        monkeypatch.setattr(run, "RESULTS", common.RESULTS)
+        monkeypatch.setattr(sys, "argv", ["run"] + argv)
+        try:
+            run.main()
+        except SystemExit:
+            pass
+        return _json.loads(results_path.read_text())
+
+    failed = run_main([])                        # beta fails, alpha lands
+    assert "beta" in failed["errors"]
+    clean = run_main(["alpha"])                  # re-run only alpha
+    assert "beta" in clean["errors"]             # partial rows still marked
+    assert {r["name"] for r in clean["rows"]} == {"alpha_row", "beta_partial"}
+    fixed = run_main(["beta"])                   # but beta itself... still red
+    assert "beta" in fixed["errors"]
+
+
+def test_stale_bench_rows_not_carried(tmp_path, monkeypatch):
+    """Rows (and errors) of a bench that no longer exists in BENCHES
+    must not be carried forward — frozen timings of a renamed bench
+    would satisfy the regression guard forever."""
+    import json as _json
+    import sys
+
+    import benchmarks.common as common
+    import benchmarks.run as run
+
+    results_path = tmp_path / "BENCH_results.json"
+    results_path.write_text(_json.dumps({
+        "schema": 1, "bench_seeds_override": None,
+        "rows": [{"name": "old_row", "us_per_call": 5.0, "derived": "",
+                  "metrics": {}, "bench": "renamed-away"}],
+        "errors": {"renamed-away": "RuntimeError: gone"},
+    }))
+    monkeypatch.setattr(run, "RESULTS_PATH", str(results_path))
+    monkeypatch.setattr(
+        run, "BENCHES", {"alpha": lambda: common.emit("alpha_row", 1.0, "v=1")})
+    monkeypatch.setattr(common, "RESULTS", [])
+    monkeypatch.setattr(run, "RESULTS", common.RESULTS)
+    monkeypatch.setattr(sys, "argv", ["run", "alpha"])
+    run.main()
+    payload = _json.loads(results_path.read_text())
+    assert {r["name"] for r in payload["rows"]} == {"alpha_row"}
+    assert "errors" not in payload

@@ -163,3 +163,51 @@ def test_throughput_conservation(counts):
         assert total <= 100.0 + 1e-6
         # max-min on a dedicated link also saturates it
         assert total == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# layer_load_stats: single source for per_layer_fim + report.analyze_paths
+# ---------------------------------------------------------------------------
+
+
+def test_layer_load_stats_consistent_with_per_layer_fim():
+    from repro.core.fim import layer_load_stats
+
+    fab = _line_fabric(4)
+    paths = _paths_from_counts(fab, [5, 1, 1, 1])
+    stats = layer_load_stats(paths, fab)
+    assert set(stats) == set(per_layer_fim(paths, fab))
+    s = stats["layer"]
+    assert s.total == 8
+    assert s.n_links == 4
+    assert s.ideal == pytest.approx(2.0)
+    assert s.fim_pct == pytest.approx(per_layer_fim(paths, fab)["layer"][0])
+    assert set(s.link_counts) == {l.name for l in fab.links}  # idle included
+    assert sum(s.link_counts.values()) == s.total
+
+
+def test_layer_load_stats_guards_empty_and_idle_layers():
+    from repro.core.fim import layer_load_stats
+
+    fab = _line_fabric(3)
+    paths = _paths_from_counts(fab, [2, 1, 0])
+    # unknown / linkless layer: skipped, not a ZeroDivisionError
+    assert layer_load_stats(paths, fab, layers=["no-such-layer"]) == {}
+    # zero-traffic layer: dropped like per_layer_fim drops it
+    assert layer_load_stats({}, fab) == {}
+
+
+def test_analyze_paths_single_sourced_from_layer_stats():
+    from repro.core import analyze_paths
+    from repro.core.fim import layer_load_stats
+
+    fab = _line_fabric(4)
+    paths = _paths_from_counts(fab, [6, 2, 0, 0])
+    rep = analyze_paths(paths, fab)
+    stats = layer_load_stats(paths, fab)
+    assert rep.per_layer == {k: s.link_counts for k, s in stats.items()}
+    assert rep.ideal_per_layer == {k: s.ideal for k, s in stats.items()}
+    assert rep.per_layer_fim == {k: s.fim_pct for k, s in stats.items()}
+    # collisions: exactly the links above the layer ideal, worst first
+    assert rep.collisions == [("a:p0->b:q0", 6)]
+    assert rep.aggregate_fim == pytest.approx(fim(paths, fab))

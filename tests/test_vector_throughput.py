@@ -112,7 +112,8 @@ def test_monte_carlo_front_end(paper_compiled, paper_setup):
     assert (mc.rates > 0).all()
     assert mc.per_pair.max() <= 400.0 + 1e-6
     s = mc.summary()
-    assert set(s) == {"flow_rate", "pair_total", "pair_min", "pair_median"}
+    assert set(s) == {"flow_rate", "flow_goodput", "pair_total",
+                      "pair_min", "pair_median"}
     assert s["pair_min"]["min"] <= s["pair_median"]["p50"] <= 400.0 + 1e-6
     # workload synthesis inside the front end == explicit flow list
     mc2 = monte_carlo_throughput(paper_compiled, flows, np.arange(32))
@@ -217,3 +218,43 @@ def test_duplicate_link_in_path_counted_once():
 def test_batched_max_min_rejects_bad_shape():
     with pytest.raises(ValueError):
         batched_max_min(np.zeros((2, 3), np.int32), np.array([1.0]))
+
+
+# ---------------------------------------------------------------------------
+# dedup_link_ids: sort-based rewrite vs the original pairwise scan
+# ---------------------------------------------------------------------------
+
+
+def _dedup_link_ids_reference(link_ids):
+    """The pre-vectorization O(H^2) pairwise scan, kept as the oracle."""
+    ids = np.array(link_ids, copy=True)
+    for h in range(1, ids.shape[0]):
+        dup = (ids[h] == ids[0]) & (ids[0] >= 0)
+        for g in range(1, h):
+            dup |= (ids[h] == ids[g]) & (ids[g] >= 0)
+        ids[h][dup] = -1
+    return ids
+
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(1, 4),
+       st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_dedup_matches_pairwise_reference(h, n, s, rngseed):
+    from repro.core.vector_throughput import dedup_link_ids
+
+    rng = np.random.default_rng(rngseed)
+    # small id range forces plenty of within-path duplicates; -1 holes
+    # (short paths) must never be collapsed
+    ids = rng.integers(-1, 4, (h, n, s)).astype(np.int32)
+    got = dedup_link_ids(ids)
+    np.testing.assert_array_equal(got, _dedup_link_ids_reference(ids))
+    # input untouched, first occurrence kept
+    assert got is not ids
+
+
+def test_dedup_keeps_earliest_hop():
+    from repro.core.vector_throughput import dedup_link_ids
+
+    ids = np.array([[[2]], [[2]], [[1]], [[2]]], np.int32)   # (H=4, 1, 1)
+    np.testing.assert_array_equal(
+        dedup_link_ids(ids)[:, 0, 0], [2, -1, 1, -1])
