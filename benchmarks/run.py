@@ -24,7 +24,7 @@ from . import (
     bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
     fig4_thread_scaling, fig5_connection_strategies, goodput, hetero_demand,
     monte_carlo_fim, placement_ablation, roofline, throughput_sweep,
-    vxlan_entropy,
+    timeline, vxlan_entropy,
 )
 from .common import RESULTS
 
@@ -38,6 +38,7 @@ BENCHES = {
     "hetero": hetero_demand.run,
     "monte_carlo": monte_carlo_fim.run,
     "throughput": throughput_sweep.run,
+    "timeline": timeline.run,
     "placement": placement_ablation.run,
     "vxlan": vxlan_entropy.run,
     "roofline": roofline.run,

@@ -32,14 +32,20 @@ from .vector_throughput import (
     monte_carlo_throughput,
 )
 from .strategies import (
-    RoutingStrategy, EcmpStrategy, PrimeSpraying, CongestionAware,
+    RoutingStrategy, EcmpStrategy, PrimeSpraying, AdaptiveSpraying,
+    CongestionAware,
     register_strategy, resolve_strategy, available_strategies,
     ELEPHANT_MIN_BYTES,
 )
 from .reordering import (
     TransportProfile, IDEAL, ROCE_NACK, STRACK,
+    ROCE_NACK_ANCHORS, STRACK_ANCHORS, calibrate_transport,
     register_transport, resolve_transport, available_transports,
     flowlet_exposure, reordering_efficiency,
+)
+from .timeline import (
+    TimelineStep, TimelineResult, StepResult, simulate_timeline,
+    merged_step, partition_flows, flow_channel,
 )
 from .fim import (
     fim, per_layer_fim, link_flow_counts, max_min_throughput,
@@ -56,6 +62,10 @@ from .hlo_flows import (
 from .llm_workload import (
     LlmJobSpec, llm_collective_ops, llm_flows, llm_workload,
     paper_testbed_llm_workload, multipod_llm_workload,
+    llm_collective_phases, llm_schedule,
+    paper_testbed_llm_schedule, multipod_llm_schedule,
+    SCHEDULE_SEQUENTIAL, SCHEDULE_DP_OVERLAP,
+    CH_GRAD_AR, CH_FSDP_AG, CH_FSDP_RS, CH_MOE_A2A, CH_BARRIER,
 )
 from .placement import (
     static_route_assignment, topology_aware_ring, ring_edge_stats,
@@ -79,12 +89,16 @@ __all__ = [
     "MonteCarloThroughput", "batched_max_min", "max_min_rates",
     "flow_rates_from_flowlets", "pair_rate_matrix", "throughput_from_result",
     "monte_carlo_throughput",
-    "RoutingStrategy", "EcmpStrategy", "PrimeSpraying", "CongestionAware",
+    "RoutingStrategy", "EcmpStrategy", "PrimeSpraying", "AdaptiveSpraying",
+    "CongestionAware",
     "register_strategy", "resolve_strategy", "available_strategies",
     "ELEPHANT_MIN_BYTES",
     "TransportProfile", "IDEAL", "ROCE_NACK", "STRACK",
+    "ROCE_NACK_ANCHORS", "STRACK_ANCHORS", "calibrate_transport",
     "register_transport", "resolve_transport", "available_transports",
     "flowlet_exposure", "reordering_efficiency",
+    "TimelineStep", "TimelineResult", "StepResult", "simulate_timeline",
+    "merged_step", "partition_flows", "flow_channel",
     "fim", "per_layer_fim", "link_flow_counts", "max_min_throughput",
     "per_pair_throughput", "layer_load_stats", "LayerLoadStats",
     "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",
@@ -93,6 +107,10 @@ __all__ = [
     "shape_bytes", "CollectiveSummary", "EdgeClassCounts", "wire_and_operand",
     "LlmJobSpec", "llm_collective_ops", "llm_flows", "llm_workload",
     "paper_testbed_llm_workload", "multipod_llm_workload",
+    "llm_collective_phases", "llm_schedule",
+    "paper_testbed_llm_schedule", "multipod_llm_schedule",
+    "SCHEDULE_SEQUENTIAL", "SCHEDULE_DP_OVERLAP",
+    "CH_GRAD_AR", "CH_FSDP_AG", "CH_FSDP_RS", "CH_MOE_A2A", "CH_BARRIER",
     "static_route_assignment", "topology_aware_ring", "ring_edge_stats",
     "balanced_port_spread",
     "analyze_paths", "PathReport",

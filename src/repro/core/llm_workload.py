@@ -34,6 +34,7 @@ from .flows import Flow, WorkloadDescription, workload_from_flows
 from .hlo_flows import (
     CollectiveOp, EdgeClassCounts, collectives_to_flows, wire_and_operand,
 )
+from .timeline import TimelineStep
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -176,3 +177,100 @@ def multipod_llm_workload(
                          "hosts_per_pod": 8, "ep_group_hosts": 16,
                          **overrides})
     return llm_workload(spec)
+
+
+# ---------------------------------------------------------------------------
+# Phase schedules (core/timeline.py)
+# ---------------------------------------------------------------------------
+
+#: channel map of ``llm_collective_ops``, the schedule vocabulary
+CH_GRAD_AR, CH_FSDP_AG, CH_FSDP_RS, CH_MOE_A2A, CH_BARRIER = 1, 2, 3, 4, 5
+
+#: every collective runs alone, in training-step order — the synchronous
+#: schedule of a vanilla FSDP/EP step (no comm/comm overlap)
+SCHEDULE_SEQUENTIAL = "sequential"
+#: gradient all-reduce overlapped into the backward phase (the standard
+#: DP-overlap optimization), MoE shuffle overlapped with the forward
+#: all-gather — two fat phases instead of four thin ones
+SCHEDULE_DP_OVERLAP = "dp-overlap"
+
+
+def llm_collective_phases(
+    spec: LlmJobSpec, mode: str = SCHEDULE_SEQUENTIAL,
+) -> tuple[list[CollectiveOp], list[TimelineStep]]:
+    """Schedule-emitting variant of ``llm_collective_ops``: the same op
+    list plus the ``TimelineStep`` schedule assigning each op's channel
+    to a phase of the training step.
+
+    ``"sequential"`` runs every collective in its own step — forward
+    all-gather, MoE all-to-all, backward reduce-scatter, gradient
+    all-reduce, barrier — which is what the merged snapshot mis-models
+    hardest (it charges every phase the contention of all five).
+    ``"dp-overlap"`` folds the gradient all-reduce into the backward
+    phase and the MoE shuffle into the forward phase, the usual
+    comm/comm overlap; the barrier stays its own (tiny) step.
+
+    Steps carry equal default durations (see core/timeline.py for why
+    durations, not byte shares).  Phases whose collective is absent from
+    the spec (``moe_layers=0``) still appear; ``simulate_timeline``
+    drops empty steps.
+    """
+    ops = llm_collective_ops(spec)
+    if mode == SCHEDULE_SEQUENTIAL:
+        schedule = [
+            TimelineStep("fwd-all-gather", (CH_FSDP_AG,)),
+            TimelineStep("moe-all-to-all", (CH_MOE_A2A,)),
+            TimelineStep("bwd-reduce-scatter", (CH_FSDP_RS,)),
+            TimelineStep("grad-all-reduce", (CH_GRAD_AR,)),
+            TimelineStep("barrier", (CH_BARRIER,)),
+        ]
+    elif mode == SCHEDULE_DP_OVERLAP:
+        schedule = [
+            TimelineStep("forward", (CH_FSDP_AG, CH_MOE_A2A)),
+            TimelineStep("backward", (CH_FSDP_RS, CH_GRAD_AR)),
+            TimelineStep("barrier", (CH_BARRIER,)),
+        ]
+    else:
+        raise ValueError(
+            f"unknown schedule mode {mode!r}; expected "
+            f"{SCHEDULE_SEQUENTIAL!r} or {SCHEDULE_DP_OVERLAP!r}")
+    present = {op.channel_id for op in ops}
+    schedule = [s for s in schedule
+                if any(ch in present for ch in s.channels)]
+    return ops, schedule
+
+
+def llm_schedule(
+    spec: LlmJobSpec,
+    mode: str = SCHEDULE_SEQUENTIAL,
+    *,
+    host_name: "callable[[int], str] | None" = None,
+) -> tuple[WorkloadDescription, list[Flow], EdgeClassCounts,
+           list[TimelineStep]]:
+    """Schedule-emitting variant of ``llm_workload``: the same
+    (workload, flows, stats) triple plus the phase schedule, ready for
+    ``simulate_timeline(fabric, flows, schedule, seeds)``."""
+    _, schedule = llm_collective_phases(spec, mode)
+    wl, flows, stats = llm_workload(spec, host_name=host_name)
+    return wl, flows, stats, schedule
+
+
+def paper_testbed_llm_schedule(
+    mode: str = SCHEDULE_SEQUENTIAL, **overrides,
+) -> tuple[WorkloadDescription, list[Flow], EdgeClassCounts,
+           list[TimelineStep]]:
+    """``paper_testbed_llm_workload`` plus its phase schedule."""
+    spec = LlmJobSpec(**{"num_hosts": 16, "hosts_per_pod": None,
+                         **overrides})
+    return llm_schedule(spec, mode, host_name=server_name)
+
+
+def multipod_llm_schedule(
+    mode: str = SCHEDULE_SEQUENTIAL, **overrides,
+) -> tuple[WorkloadDescription, list[Flow], EdgeClassCounts,
+           list[TimelineStep]]:
+    """``multipod_llm_workload`` plus its phase schedule."""
+    spec = LlmJobSpec(**{"num_hosts": 16, "chips_per_host": 4,
+                         "hosts_per_pod": 8, "ep_group_hosts": 16,
+                         **overrides})
+    return llm_schedule(spec, mode)

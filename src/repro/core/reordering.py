@@ -44,16 +44,29 @@ stage, all vectorized over the ``(N flows, S seeds)`` Monte-Carlo grid:
    surfaced by ``throughput_from_result`` / ``monte_carlo_throughput``
    via ``transport=`` (see core/vector_throughput.py).
 
+Adaptive re-spray adds a fourth, *strategy-induced* exposure source: a
+``VectorTraceResult`` may carry ``extra_exposure`` (each accepted
+mid-flow path change of ``AdaptiveSpraying`` is a reordering burst the
+static skew/dispersion terms cannot see), which ``flowlet_exposure``
+adds on top.  ``None`` — every static strategy — keeps the PR-5 model
+bit-exact.
+
 Three profiles ship registered: ``ideal`` (reordering is free — the
-pre-PR-5 behaviour, and the default), ``roce-nack`` (go-back-N-ish:
-steep decay, low floor) and ``strack`` (out-of-order tracking: shallow
-decay, high floor).  Register custom transports with
-``register_transport``.
+pre-PR-5 behaviour, and the default), ``roce-nack`` (go-back-N
+semantics) and ``strack`` (out-of-order tracking).  The lossy two are
+no longer stylized constants: ``calibrate_transport`` fits alpha/floor
+against anchor points read off the published goodput-vs-reordering
+curves (STrack, arXiv 2407.15266 — STrack itself and its go-back-N
+RoCE baseline, the regime IRN established), so the goodput claims the
+strategy matrices make are anchored to measured transport behaviour.
+Register custom transports with ``register_transport`` (duplicate names
+raise — a silent overwrite would quietly re-anchor every benchmark).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -81,20 +94,92 @@ class TransportProfile:
             raise ValueError(f"floor must be in (0, 1], got {self.floor}")
 
 
+def calibrate_transport(
+    name: str,
+    anchors: Sequence[tuple[float, float]],
+    *,
+    grid: int = 4000,
+) -> TransportProfile:
+    """Fit a ``TransportProfile`` through published (exposure,
+    efficiency) anchor points.
+
+    The model ``eff = 1 + (1 - floor) * expm1(-alpha * exposure)`` is
+    linear in ``(1 - floor)`` once alpha is fixed, so the fit is a 1-D
+    deterministic grid search over alpha (log-spaced) with the
+    closed-form least-squares ``floor`` at each candidate — no SciPy, no
+    randomness, same constants on every machine.  Anchors at exposure 0
+    are redundant (the model passes through (0, 1) exactly) and
+    rejected to keep calibration data honest.
+    """
+    pts = [(float(x), float(y)) for x, y in anchors]
+    if len(pts) < 2:
+        raise ValueError(f"need >= 2 anchor points, got {len(pts)}")
+    for x, y in pts:
+        if x <= 0:
+            raise ValueError(
+                f"anchor exposure must be > 0 (the model is exact at 0), "
+                f"got {x}")
+        if not 0.0 < y < 1.0:
+            raise ValueError(f"anchor efficiency must be in (0, 1), got {y}")
+    x = np.array([p[0] for p in pts])
+    y = np.array([p[1] for p in pts])
+    alphas = np.exp(np.linspace(np.log(1e-3), np.log(50.0), grid))
+    g = np.expm1(-alphas[:, None] * x[None, :])        # (grid, P)
+    # least squares for u = 1 - floor in  (y - 1) = u * g,  clipped to
+    # the valid floor range (0, 1]
+    u = np.clip((g * (y - 1.0)[None, :]).sum(1) / (g * g).sum(1),
+                0.0, 1.0 - 1e-9)
+    sse = (((1.0 + u[:, None] * g) - y[None, :]) ** 2).sum(1)
+    best = int(np.argmin(sse))
+    return TransportProfile(name, alpha=float(alphas[best]),
+                            floor=float(1.0 - u[best]))
+
+
 #: reordering is free — the historical model, and the default everywhere
 IDEAL = TransportProfile("ideal", alpha=0.0, floor=1.0)
-#: go-back-N-ish RoCE NACK semantics: any reordering triggers
-#: retransmission of the whole window, goodput collapses fast
-ROCE_NACK = TransportProfile("roce-nack", alpha=3.0, floor=0.25)
-#: STrack-like out-of-order tracking (arXiv 2407.15266): the transport
-#: absorbs most reordering, mild decay with a high floor
-STRACK = TransportProfile("strack", alpha=0.6, floor=0.8)
+
+#: anchor points (exposure, goodput efficiency) read off the published
+#: goodput-vs-reordering behaviour in STrack (arXiv 2407.15266).  The
+#: exposure axis is this module's dimensionless skew+dispersion measure:
+#: ~0.25 is mild multipath reordering (packet spraying on a balanced
+#: symmetric Clos), ~1 is heavy reordering (spraying across paths with
+#: clearly unequal congestion), >=4 is the adversarial regime (spraying
+#: plus failures/asymmetry).
+#:
+#: * RoCE with go-back-N loss recovery (STrack's RoCEv2 baseline; the
+#:   regime IRN, SIGCOMM'18, measured): out-of-order arrivals are NACKed
+#:   and the whole window retransmits, so goodput falls off a cliff —
+#:   roughly a quarter of line rate once reordering is heavy, and it
+#:   does not recover with more reordering (every window is already
+#:   being resent).
+ROCE_NACK_ANCHORS = ((0.25, 0.78), (0.5, 0.60), (1.0, 0.38), (4.0, 0.26))
+#: * STrack tracks out-of-order ranges per path and selectively repeats
+#:   only the missing ranges, sustaining near-line-rate goodput under
+#:   spraying (its headline claim: ~39% over RoCE at 1% loss, minor
+#:   degradation from reordering alone) with a high asymptotic floor.
+STRACK_ANCHORS = ((0.25, 0.985), (0.5, 0.97), (1.0, 0.945), (4.0, 0.88))
+
+#: go-back-N RoCE NACK semantics, calibrated through ROCE_NACK_ANCHORS
+ROCE_NACK = calibrate_transport("roce-nack", ROCE_NACK_ANCHORS)
+#: STrack-like out-of-order tracking, calibrated through STRACK_ANCHORS
+STRACK = calibrate_transport("strack", STRACK_ANCHORS)
 
 _TRANSPORTS: dict[str, TransportProfile] = {}
 
 
-def register_transport(profile: TransportProfile) -> TransportProfile:
-    """Register ``profile`` so ``transport="name"`` resolves to it."""
+def register_transport(profile: TransportProfile, *,
+                       replace: bool = False) -> TransportProfile:
+    """Register ``profile`` so ``transport="name"`` resolves to it.
+
+    A duplicate name raises unless ``replace=True``: every benchmark and
+    test resolves transports by name, so silently overwriting e.g.
+    ``"roce-nack"`` would re-anchor all their goodput numbers without a
+    trace."""
+    if not replace and profile.name in _TRANSPORTS:
+        raise ValueError(
+            f"transport profile {profile.name!r} is already registered "
+            f"(registered: {available_transports()}); pass replace=True "
+            f"to overwrite it")
     _TRANSPORTS[profile.name] = profile
     return profile
 
@@ -140,12 +225,20 @@ def flowlet_exposure(
     Zero-link flowlets carry infinite max-min rates; they traverse no
     shared queue, so they are excluded from the dispersion term (a flow
     whose flowlets are *all* link-free disperses nothing).
+
+    ``result.extra_exposure`` — strategy-induced reordering the static
+    terms cannot see (adaptive re-spray's accepted mid-flow path
+    changes) — is added on top; ``None`` and all-zero both keep the
+    static model's values bit-identical (``x + 0.0 == x`` for the
+    non-negative exposures both terms produce).
     """
     n, s = result.num_flows, result.num_seeds
+    extra = result.extra_exposure
     fi = np.asarray(result.flow_index)
     if not result.is_multipath and fi.size == n and (
             fi == np.arange(n)).all():
-        return np.zeros((n, s))            # single-path: no reordering
+        base = np.zeros((n, s))            # single-path: no reordering
+        return base if extra is None else base + extra
 
     hops = result.hop_counts().astype(np.float64)                 # (Nf, S)
     hmin = segment_reduce(hops, fi, n, np.minimum, np.inf)
@@ -167,7 +260,8 @@ def flowlet_exposure(
     exposure = skew + dispersion
     # parents with no columns (possible only through hand-built results)
     # reorder nothing; scrub the fallback's inf/nan seeds
-    return np.where(np.isfinite(exposure), exposure, 0.0)
+    exposure = np.where(np.isfinite(exposure), exposure, 0.0)
+    return exposure if extra is None else exposure + extra
 
 
 def reordering_efficiency(

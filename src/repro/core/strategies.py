@@ -40,6 +40,7 @@ registered name or a strategy instance via ``strategy=``.
 
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from collections.abc import Callable, Sequence
 
@@ -255,6 +256,197 @@ class PrimeSpraying(RoutingStrategy):
             flow_demand=flow_demand_weights(flows, demand_mode))
 
 
+def _weighted_link_loads(link_ids: np.ndarray, weights: np.ndarray,
+                         num_links: int) -> np.ndarray:
+    """(S, L) demand-weighted link loads of an ``(H, Nf, S)`` tensor —
+    the same bincount ``VectorTraceResult.link_flow_counts`` runs, over
+    an explicit tensor (adaptive re-spray recomputes it per round on its
+    evolving paths)."""
+    S = link_ids.shape[2]
+    offset = np.arange(S, dtype=np.int64) * num_links
+    keep = link_ids >= 0
+    flat = (link_ids.astype(np.int64) + offset)[keep]
+    w = np.broadcast_to(weights[None, :, None], link_ids.shape)[keep]
+    return np.bincount(flat, weights=w,
+                       minlength=S * num_links).reshape(S, num_links)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized SplitMix64 finalizer — a stateless uint64 mixer for the
+    adaptive re-spray coin flips (deterministic in the cell/seed/round
+    coordinates, no global RNG state)."""
+    z = x + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def _path_max_load(link_ids: np.ndarray, loads: np.ndarray) -> np.ndarray:
+    """(C, S) hottest-link load along each column's path, given (S, L)
+    link loads.  Link-free columns read 0 (they queue nowhere)."""
+    S, L = loads.shape
+    flat = loads.reshape(-1)
+    cells = link_ids.astype(np.int64) + (np.arange(S, dtype=np.int64) * L)
+    vals = np.where(link_ids >= 0,
+                    flat[np.where(link_ids >= 0, cells, 0)], 0.0)
+    return vals.max(axis=0) if link_ids.shape[0] else np.zeros(
+        link_ids.shape[1:])
+
+
+class AdaptiveSpraying(PrimeSpraying):
+    """PRIME's headline *adaptive* mode: per-RTT entropy re-pick under
+    congestion feedback (arXiv 2507.23012).
+
+    Static spraying commits each flowlet to one entropy label for the
+    whole transfer; PRIME instead treats the label as disposable — when
+    the fabric's feedback (ECN marks / RTT inflation) says a flowlet's
+    path is congested, the sender re-picks the entropy value on the next
+    round, re-rolling every switch hash on that flowlet's walk.  This
+    strategy simulates ``rounds`` such RTTs on top of the (bit-identical)
+    ``PrimeSpraying`` round-0 allocation:
+
+    1. **feedback**: demand-weighted link loads of the current paths,
+       per seed; a flowlet is *marked* when its path's hottest link
+       carries more than ``ecn_factor`` x that seed's mean loaded-link
+       load (the ECN-threshold analogue);
+    2. **re-pick**: every marked (flowlet, seed) cell draws a fresh
+       entropy salt (a new label value) and walks its candidate path
+       against the frozen load snapshot;
+    3. **accept**: the move is kept only when the candidate's hottest
+       link plus the flowlet's own demand undercuts its current path's
+       hottest link — the sender keeps entropy that works and discards
+       picks that land somewhere worse (REPS-style "recycle good
+       entropy"; cf. the accept/repair policy of arXiv 2506.08132).
+
+    Unmarked cells keep their salt, so their walks replay bit-identically
+    (``x ^ 0 == x`` in the salted walk) and a run whose feedback never
+    fires returns exactly the static allocation.  ``rounds=1`` *is*
+    ``PrimeSpraying`` wholesale.
+
+    Re-picking is not free: every accepted move is a mid-flow path
+    change — a reordering burst the static skew/dispersion exposure
+    cannot see — charged as ``respray_cost`` per accepted round, scaled
+    by the moved flowlet's demand fraction, via
+    ``VectorTraceResult.extra_exposure`` (core/reordering.py adds it to
+    the transport model's exposure).  The PR-5 lesson priced blind
+    spraying; this prices the adaptation itself.
+    """
+
+    name = "adaptive-spray"
+
+    def __init__(self, flowlets: int = 8,
+                 parts: Sequence[int] | None = None,
+                 min_bytes: float | None = None,
+                 volume_k: bool = False,
+                 rounds: int = 4,
+                 ecn_factor: float = 1.25,
+                 respray_cost: float = 0.05,
+                 move_prob: float = 0.25):
+        super().__init__(flowlets, parts, min_bytes=min_bytes,
+                         volume_k=volume_k)
+        if rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {rounds}")
+        if not ecn_factor > 0:
+            raise ValueError(f"ecn_factor must be > 0, got {ecn_factor}")
+        if respray_cost < 0:
+            raise ValueError(
+                f"respray_cost must be >= 0, got {respray_cost}")
+        if not 0.0 < move_prob <= 1.0:
+            raise ValueError(
+                f"move_prob must be in (0, 1], got {move_prob}")
+        self.rounds = int(rounds)
+        self.ecn_factor = float(ecn_factor)
+        self.respray_cost = float(respray_cost)
+        self.move_prob = float(move_prob)
+
+    def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
+              hash_backend=EXACT, max_hops=16, field_matrix=None,
+              demand_mode=DEMAND_UNIFORM):
+        res = super().route(comp, flows, seeds_u64, fields=fields,
+                            hash_backend=hash_backend, max_hops=max_hops,
+                            field_matrix=field_matrix,
+                            demand_mode=demand_mode)
+        if self.rounds == 1 or not res.is_multipath:
+            return res                     # static spray / ECMP degenerate
+        field_mat = (field_matrix if field_matrix is not None
+                     else flow_fields_matrix(flows, fields))
+        n, s = len(flows), len(seeds_u64)
+        fi, demand = res.flow_index, res.demand
+        col_w = res.column_weights()
+        k_f = self.flowlet_counts(flows)
+        spray_cols = np.flatnonzero(k_f[fi] > 1)
+        starts = np.concatenate(([0], np.cumsum(k_f)[:-1]))
+        local = np.arange(fi.size, dtype=np.int64) - starts[fi]
+        # fixed walk inputs for the sprayed columns: the same entropy
+        # labels as round 0, so salt == 0 replays the base walk exactly
+        fm_s = np.concatenate(
+            [field_mat[fi[spray_cols]],
+             self.entropy_labels()[local[spray_cols]]], axis=1)
+        endpoints = comp.flow_endpoint_ids(flows)
+        ep_s = tuple(a[fi[spray_cols]] for a in endpoints)
+        w_col = col_w[spray_cols][:, None]         # (C, 1)
+        link_ids = res.link_ids
+        salt = np.zeros((spray_cols.size, s), np.uint64)
+        probe = np.zeros((spray_cols.size, s), np.uint64)
+        resprays = np.zeros((spray_cols.size, s))
+
+        def walk(cell_salt):
+            return ecmp_walk(
+                comp, *ep_s, fm_s, seeds_u64, hash_backend=hash_backend,
+                max_hops=max_hops, cell_salt=cell_salt,
+                describe=lambda j: (
+                    f"flow {flows[int(fi[spray_cols[int(j)]])].flow_id} "
+                    f"respray flowlet {int(local[spray_cols[int(j)]])}"))
+
+        # per-cell coin identity: decorrelated across flowlets and seeds,
+        # re-mixed with the round index below so each round flips fresh
+        cell_id = (_splitmix64(spray_cols.astype(np.uint64))[:, None]
+                   ^ seeds_u64[None, :])
+        p_bits = np.uint64(int(self.move_prob * 2.0 ** 53))
+        for rnd in range(self.rounds - 1):
+            loads = _weighted_link_loads(link_ids, col_w, comp.num_links)
+            cur = link_ids[:, spray_cols, :]
+            path_max = _path_max_load(cur, loads)
+            mean_load = (loads.sum(axis=1)
+                         / np.maximum((loads > 0).sum(axis=1), 1))
+            marked = path_max > self.ecn_factor * mean_load[None, :]
+            if not marked.any():
+                break
+            # herd damping: every marked cell re-picks only with
+            # probability ``move_prob`` per round — acceptance is judged
+            # against a frozen load snapshot, so letting every congested
+            # flowlet move at once stampedes them onto the same cool
+            # links and *creates* the next hotspot
+            coin = _splitmix64(
+                cell_id ^ np.uint64((rnd + 1) * 0xD1B54A32D192ED03 &
+                                    0xFFFFFFFFFFFFFFFF))
+            marked &= (coin >> np.uint64(11)) < p_bits
+            if not marked.any():
+                continue
+            probe = probe + marked                  # fresh salt per probe
+            cand = walk(np.where(marked, probe, salt))
+            cand_max = _path_max_load(cand, loads)
+            accept = marked & (cand_max + w_col < path_max)
+            if not accept.any():
+                continue
+            salt = np.where(accept, probe, salt)
+            resprays += accept
+            hops = max(link_ids.shape[0], cand.shape[0])
+            merged = np.full((hops,) + cur.shape[1:], -1, np.int32)
+            np.copyto(merged[:cur.shape[0]], cur)
+            np.copyto(merged[:cand.shape[0]], cand[:hops],
+                      where=accept[None, :, :])
+            nxt = np.full((hops,) + link_ids.shape[1:], -1, np.int32)
+            np.copyto(nxt[:link_ids.shape[0]], link_ids)
+            nxt[:, spray_cols, :] = merged
+            link_ids = nxt
+        extra = np.zeros((n, s))
+        np.add.at(extra, fi[spray_cols],
+                  resprays * demand[spray_cols][:, None])
+        return dataclasses.replace(res, link_ids=link_ids,
+                                   extra_exposure=self.respray_cost * extra)
+
+
 class CongestionAware(RoutingStrategy):
     """Greedy congestion-aware selection (cf. arXiv 2506.08132).
 
@@ -373,9 +565,20 @@ _REGISTRY: dict[str, Callable[[], RoutingStrategy]] = {}
 
 
 def register_strategy(name: str,
-                      factory: Callable[[], RoutingStrategy]) -> None:
+                      factory: Callable[[], RoutingStrategy],
+                      *, replace: bool = False) -> None:
     """Register a strategy factory under ``name`` so benchmarks and the
-    ``strategy="..."`` string form can construct it on demand."""
+    ``strategy="..."`` string form can construct it on demand.
+
+    A duplicate name raises unless ``replace=True``: every benchmark
+    matrix and Monte-Carlo front end resolves strategies by name, so a
+    silent overwrite of e.g. ``"ecmp"`` would swap the baseline out from
+    under all of them without a trace."""
+    if not replace and name in _REGISTRY:
+        raise ValueError(
+            f"routing strategy {name!r} is already registered "
+            f"(registered: {available_strategies()}); pass replace=True "
+            f"to overwrite it")
     _REGISTRY[name] = factory
 
 
@@ -406,3 +609,7 @@ register_strategy("prime-spray-elephant",
                   lambda: PrimeSpraying(min_bytes=ELEPHANT_MIN_BYTES,
                                         volume_k=True))
 register_strategy("congestion-aware", CongestionAware)
+register_strategy("adaptive-spray", AdaptiveSpraying)
+register_strategy("adaptive-spray-elephant",
+                  lambda: AdaptiveSpraying(min_bytes=ELEPHANT_MIN_BYTES,
+                                           volume_k=True))

@@ -1,0 +1,278 @@
+"""Time-expanded simulation: phased collectives over one compiled fabric.
+
+The Monte-Carlo front ends (``monte_carlo_fim`` /
+``monte_carlo_throughput``) flatten a workload into ONE steady-state
+flow set — fine for the paper's saturating bipartite sweep, wrong for
+the phased LLM mixes of ``core/llm_workload.py``: a training step runs
+its collectives in *phases* (forward all-gather, MoE all-to-all,
+backward reduce-scatter, gradient all-reduce, barrier), so merging them
+into a single snapshot both **overstates contention** between
+collectives that never share the wire and **hides phase-local
+hotspots** that the other phases' flows average away.  Same class of
+silent modeling bug the byte-blind FIM (PR 4) and free spraying (PR 5)
+were: the simulation answers a question the workload never asks.
+
+This module adds the time axis:
+
+* a schedule is a list of ``TimelineStep``s, each naming the collective
+  *channels* (``CollectiveOp.channel_id``) active during that step and a
+  relative duration ``weight``;
+* ``simulate_timeline`` partitions one flow list by channel, routes each
+  step's active flow set independently over ONE shared
+  ``compile_fabric`` pass, and scores each step with the *same* engines
+  the merged path uses — ``simulate_paths`` + ``fim_from_counts`` +
+  ``throughput_from_result`` — so a one-step schedule containing every
+  channel reproduces the merged snapshot **bit-identically** (the
+  differential anchor in tests/test_timeline.py);
+* ``TimelineResult`` carries the per-step series and the time-weighted
+  totals.
+
+**Step weights are durations, not byte shares.**  With byte-proportional
+weights the time-weighted FIM can *never* exceed the merged FIM (the
+merged load vector is the byte-weighted mean of the step load vectors,
+and MAPE is convex — triangle inequality), which would hide exactly the
+bug this module exposes.  Equal default weights model a synchronous
+schedule — every phase holds the fabric for one barrier-to-barrier
+interval regardless of how many bytes it moves — and make the
+phased-vs-merged gap visible in both directions: a schedule whose steps
+are dominated by one hot collective reads *lower* contention merged
+(the cold phases dilute it) and *higher* phase-local FIM expanded.
+
+Schedule emitters for the committed LLM scenarios live in
+``core/llm_workload.py`` (``llm_collective_phases`` et al.) with two
+modes: ``"sequential"`` (every phase alone, the synchronous-training
+default) and ``"dp-overlap"`` (gradient all-reduce overlapped into the
+backward phase, the standard DP-overlap optimization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections.abc import Sequence
+
+import numpy as np
+
+from .compile_fabric import CompiledFabric, compile_fabric
+from .ecmp import FIELDS_5TUPLE
+from .fabric import Fabric
+from .flows import Flow, WorkloadDescription
+from .vector_sim import (
+    DEMAND_UNIFORM, EXACT, MonteCarloFim, fim_from_counts, resolve_flows,
+    simulate_paths,
+)
+from .vector_throughput import MonteCarloThroughput, throughput_from_result
+
+_CHANNEL_RE = re.compile(r"#ch(\d+)$")
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class TimelineStep:
+    """One schedule step: the channels on the wire and how long they hold it.
+
+    ``channels`` are ``CollectiveOp.channel_id`` values (the flow labels
+    carry them as the ``#ch<N>`` suffix ``collectives_to_flows`` emits);
+    a channel may appear in several steps (an overlapped collective
+    spans phases).  ``weight`` is the step's relative *duration* — see
+    the module docstring for why it is not a byte share.
+    """
+
+    name: str
+    channels: tuple[int, ...]
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if not self.channels:
+            raise ValueError(f"step {self.name!r} has no channels")
+        if not self.weight > 0:
+            raise ValueError(
+                f"step {self.name!r} weight must be > 0, got {self.weight}")
+
+
+def merged_step(schedule: Sequence[TimelineStep],
+                name: str = "merged") -> TimelineStep:
+    """The degenerate one-step schedule: every channel of ``schedule``
+    active at once — the merged-snapshot view the time axis replaces,
+    kept as the differential anchor."""
+    seen: dict[int, None] = {}
+    for step in schedule:
+        for ch in step.channels:
+            seen.setdefault(ch, None)
+    return TimelineStep(name=name, channels=tuple(seen))
+
+
+def flow_channel(flow: Flow) -> int | None:
+    """The collective channel id a flow belongs to, parsed from the
+    ``#ch<N>`` label suffix ``collectives_to_flows`` writes.  ``None``
+    for unlabeled flows (synthetic bipartite workloads)."""
+    m = _CHANNEL_RE.search(flow.label)
+    return int(m.group(1)) if m else None
+
+
+def partition_flows(
+    flows: Sequence[Flow], schedule: Sequence[TimelineStep]
+) -> list[list[Flow]]:
+    """Each step's active flow sublist, in original flow order (order
+    preservation is what makes the one-step schedule bit-identical to
+    the merged run).  Flows whose channel appears in no step raise —
+    silently dropping traffic is exactly the class of bug this module
+    exists to remove."""
+    chans = [flow_channel(f) for f in flows]
+    covered = {ch for step in schedule for ch in step.channels}
+    stray = sorted({c for c in chans if c is not None and c not in covered})
+    if stray:
+        raise ValueError(
+            f"flows on channels {stray} appear in no schedule step "
+            f"(steps cover {sorted(covered)}); every collective must be "
+            f"scheduled somewhere")
+    unlabeled = sum(c is None for c in chans)
+    if unlabeled:
+        raise ValueError(
+            f"{unlabeled} flows carry no '#ch<N>' label — "
+            f"time-expanded simulation needs collective-derived flows "
+            f"(see core/llm_workload.py)")
+    return [[f for f, c in zip(flows, chans) if c in step.channels]
+            for step in schedule]
+
+
+@dataclasses.dataclass
+class StepResult:
+    """One step's full scoring: the routed flow set, FIM distribution,
+    and throughput/goodput distribution — exactly what the merged
+    pipeline would report had this step been the whole workload."""
+
+    step: TimelineStep
+    flows: list[Flow]
+    fim: MonteCarloFim
+    throughput: MonteCarloThroughput
+
+    @property
+    def mean_goodput(self) -> np.ndarray:
+        """(S,) mean per-flow goodput under each seed."""
+        return self.throughput.goodput.mean(axis=0)
+
+    @property
+    def mean_rate(self) -> np.ndarray:
+        """(S,) mean per-flow max-min rate under each seed."""
+        return self.throughput.rates.mean(axis=0)
+
+
+@dataclasses.dataclass
+class TimelineResult:
+    """Per-step series + time-weighted totals of a scheduled simulation.
+
+    The totals weight each step by its normalized duration
+    (``weights``): ``fim`` is the duration-weighted mean of the per-step
+    aggregate FIM — "the imbalance a uniformly-sampling observer sees" —
+    and ``goodput`` / ``rates`` the duration-weighted mean of per-step
+    mean flow goodput/rate.  For a one-step schedule every series is the
+    step's own, bit-identically.
+    """
+
+    seeds: np.ndarray                   # (S,)
+    steps: list[StepResult]
+    weights: np.ndarray                 # (K,) normalized step durations
+    fim: np.ndarray                     # (S,) time-weighted aggregate FIM
+    goodput: np.ndarray                 # (S,) time-weighted mean goodput
+    rates: np.ndarray                   # (S,) time-weighted mean rate
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    def step_fim(self) -> np.ndarray:
+        """(K, S) per-step aggregate FIM series."""
+        return np.stack([s.fim.aggregate for s in self.steps])
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        rows: dict[str, np.ndarray] = {
+            "fim": self.fim,
+            "goodput": self.goodput,
+            "rate": self.rates,
+        }
+        for sr in self.steps:
+            rows[f"fim[{sr.step.name}]"] = sr.fim.aggregate
+            rows[f"goodput[{sr.step.name}]"] = sr.mean_goodput
+        out = {}
+        for name, v in rows.items():
+            v = np.asarray(v, np.float64).ravel()
+            out[name] = {
+                "mean": float(v.mean()),
+                "std": float(v.std()),
+                "min": float(v.min()),
+                "p50": float(np.percentile(v, 50)),
+                "max": float(v.max()),
+            }
+        return out
+
+
+def simulate_timeline(
+    fabric: Fabric | CompiledFabric,
+    workload: WorkloadDescription | Sequence[Flow],
+    schedule: Sequence[TimelineStep],
+    seeds: Sequence[int] | np.ndarray,
+    *,
+    fields: str = FIELDS_5TUPLE,
+    hash_backend: str = EXACT,
+    strategy=None,
+    demand_mode: str = DEMAND_UNIFORM,
+    transport=None,
+    layers: Sequence[str] | None = None,
+    only_used_leaves: bool = False,
+) -> TimelineResult:
+    """Simulate a phase schedule step by step over one compiled fabric.
+
+    Every step routes ONLY its active flows (the others are off the wire
+    — that is the fix), through the identical ``simulate_paths`` →
+    ``fim_from_counts`` → ``throughput_from_result`` pipeline the merged
+    front ends run, under the same ``strategy`` / ``demand_mode`` /
+    ``transport`` contract.  The compiled fabric is shared across steps;
+    a ``CompiledFabric`` passes through unchanged, so sweeps over
+    schedules or strategies pay compilation once.
+
+    Steps whose flow set is empty (e.g. a MoE step on a spec with
+    ``moe_layers=0``) are dropped, with their duration excluded from the
+    weighting; a schedule whose every step is empty raises.
+    """
+    comp = (fabric if isinstance(fabric, CompiledFabric)
+            else compile_fabric(fabric))
+    flows = resolve_flows(comp, workload)
+    if not schedule:
+        raise ValueError("schedule must contain at least one step")
+    parts = partition_flows(flows, schedule)
+    steps: list[StepResult] = []
+    durations: list[float] = []
+    for step, sub in zip(schedule, parts):
+        if not sub:
+            continue
+        res = simulate_paths(comp, sub, seeds, fields=fields,
+                             hash_backend=hash_backend, strategy=strategy,
+                             demand_mode=demand_mode)
+        agg, per_layer = fim_from_counts(
+            res.link_flow_counts(), comp,
+            layers=layers, only_used_leaves=only_used_leaves)
+        tp = throughput_from_result(res, transport=transport)
+        steps.append(StepResult(
+            step=step, flows=sub,
+            fim=MonteCarloFim(seeds=res.seeds, aggregate=agg,
+                              per_layer=per_layer),
+            throughput=tp))
+        durations.append(step.weight)
+    if not steps:
+        raise ValueError("every schedule step resolved to an empty flow set")
+    w = np.asarray(durations, np.float64)
+    w = w / w.sum()
+    if len(steps) == 1:
+        # the degenerate anchor: no weighting arithmetic may perturb it
+        fim = steps[0].fim.aggregate
+        goodput = steps[0].mean_goodput
+        rates = steps[0].mean_rate
+    else:
+        fim = np.einsum("k,ks->s", w, np.stack(
+            [s.fim.aggregate for s in steps]))
+        goodput = np.einsum("k,ks->s", w, np.stack(
+            [s.mean_goodput for s in steps]))
+        rates = np.einsum("k,ks->s", w, np.stack(
+            [s.mean_rate for s in steps]))
+    return TimelineResult(seeds=steps[0].fim.seeds, steps=steps,
+                          weights=w, fim=fim, goodput=goodput, rates=rates)

@@ -172,6 +172,12 @@ class VectorTraceResult:
     demand: np.ndarray | None = None       # (Nf,) demand fraction per column
     strategy: str = "ecmp"
     flow_demand: np.ndarray | None = None  # (N,) per-flow demand weight
+    #: optional (N, S) strategy-induced reordering exposure on top of what
+    #: the flowlet tensors imply — adaptive re-spray charges each accepted
+    #: mid-flow path change here (core/strategies.AdaptiveSpraying), and
+    #: ``flowlet_exposure`` adds it to the skew + dispersion terms.  None
+    #: (every static strategy) keeps the PR-5 exposure model bit-exact.
+    extra_exposure: np.ndarray | None = None
 
     def __post_init__(self):
         nf = self.link_ids.shape[1]
@@ -296,6 +302,7 @@ def ecmp_walk(
     *,
     hash_backend: str = EXACT,
     max_hops: int = 16,
+    cell_salt: np.ndarray | None = None,
     describe=lambda n: f"column {n}",
 ) -> np.ndarray:
     """The raw hop-by-hop hashed walk over explicit endpoint/field arrays.
@@ -306,6 +313,14 @@ def ecmp_walk(
     the ``(hops, N, S)`` link-id tensor.  ``simulate_paths`` is the
     flow-level front end; routing strategies (``core/strategies.py``)
     call this directly with expanded per-flowlet arrays.
+
+    ``cell_salt`` optionally perturbs the entropy of individual
+    ``(column, seed)`` cells: a ``(N, S)`` uint64 array XORed into every
+    hop's device seed before hashing.  A zero cell leaves that cell's
+    walk bit-identical to the salt-free walk (``x ^ 0 == x``), a nonzero
+    cell re-rolls every hop decision — the vector equivalent of a sender
+    re-picking its flowlet's entropy header value, which adaptive
+    per-RTT re-spray does per cell under congestion feedback.
     """
     N, S = len(src_dev), len(seeds_u64)
     state = np.broadcast_to(src_dev[:, None], (N, S)).copy()   # (N, S)
@@ -321,6 +336,8 @@ def ecmp_walk(
         key = np.where(comp.is_server[state], src_key[:, None], dst_key[:, None])
         n = comp.cand_n[state, key]                    # (N, S)
         dev_seed = comp.dev_crc[state] ^ seeds_u64[None, :]
+        if cell_salt is not None:
+            dev_seed = dev_seed ^ cell_salt
         h = hash_grid(field_mat, dev_seed, hash_backend)
         safe_n = np.maximum(n, 1).astype(np.uint64)
         choice = np.where(n > 1, (h % safe_n).astype(np.int64), 0)

@@ -467,7 +467,9 @@ def throughput_from_result(
     ``TransportProfile``, a registered name like ``"roce-nack"`` /
     ``"strack"``, or ``None`` for the free ``"ideal"`` model): flowlet
     out-of-order exposure is computed from the same fill
-    (``flowlet_exposure`` reuses the per-flowlet rates) and
+    (``flowlet_exposure`` reuses the per-flowlet rates, and folds in any
+    strategy-charged ``VectorTraceResult.extra_exposure`` — adaptive
+    re-spray bills its mid-flow path changes there) and
     ``goodput = rates x efficiency``.  Zero-exposure flows — every flow
     of a single-path strategy, and every unsprayed flow of demand-aware
     spraying — keep ``goodput`` bit-identical to ``rates``.  A profile

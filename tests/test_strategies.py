@@ -212,6 +212,112 @@ def test_register_custom_strategy():
         _REGISTRY.pop("probe-test", None)
 
 
+def test_unknown_strategy_error_lists_registry():
+    with pytest.raises(ValueError) as exc:
+        resolve_strategy("no-such-scheme")
+    msg = str(exc.value)
+    for name in available_strategies():
+        assert name in msg
+    assert str(available_strategies()) in msg      # sorted listing
+
+
+def test_duplicate_registration_raises():
+    class Probe(RoutingStrategy):
+        name = "probe"
+
+    register_strategy("dup-test", Probe)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_strategy("dup-test", Probe)
+        # the baseline is protected too — and the error lists the registry
+        with pytest.raises(ValueError, match="'ecmp'.*registered"):
+            register_strategy("ecmp", Probe)
+        register_strategy("dup-test", Probe, replace=True)   # explicit wins
+    finally:
+        from repro.core.strategies import _REGISTRY
+        _REGISTRY.pop("dup-test", None)
+
+
+# ---------------------------------------------------------------------------
+# adaptive re-spray
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_validation():
+    from repro.core import AdaptiveSpraying
+    with pytest.raises(ValueError, match="rounds"):
+        AdaptiveSpraying(rounds=0)
+    with pytest.raises(ValueError, match="ecn_factor"):
+        AdaptiveSpraying(ecn_factor=0.0)
+    with pytest.raises(ValueError, match="respray_cost"):
+        AdaptiveSpraying(respray_cost=-0.1)
+    with pytest.raises(ValueError, match="move_prob"):
+        AdaptiveSpraying(move_prob=0.0)
+
+
+def test_adaptive_rounds1_is_static_spray(paper_compiled, paper_setup_small):
+    """``rounds=1`` is PrimeSpraying wholesale — same tensor, no extra
+    exposure — and ``min_bytes=inf`` still degenerates to ECMP."""
+    from repro.core import AdaptiveSpraying
+    _, _, flows = paper_setup_small
+    seeds = [0, 7, 1234567]
+    static = simulate_paths(paper_compiled, flows, seeds,
+                            strategy=PrimeSpraying(8))
+    deg = simulate_paths(paper_compiled, flows, seeds,
+                         strategy=AdaptiveSpraying(8, rounds=1))
+    np.testing.assert_array_equal(static.link_ids, deg.link_ids)
+    assert deg.extra_exposure is None
+    ecmp = simulate_paths(paper_compiled, flows, seeds)
+    off = simulate_paths(paper_compiled, flows, seeds,
+                         strategy=AdaptiveSpraying(8, min_bytes=np.inf,
+                                                   rounds=4))
+    np.testing.assert_array_equal(ecmp.link_ids, off.link_ids)
+
+
+def test_adaptive_beats_static_spray_goodput(paper_compiled, paper_setup):
+    """The acceptance criterion: per-RTT re-spray under congestion
+    feedback must beat static spraying's mean goodput under the
+    reordering-intolerant roce-nack transport on the committed
+    saturating scenario — the balance win has to outweigh the
+    re-spray reordering tax it is charged."""
+    from repro.core import AdaptiveSpraying
+    _, _, flows = paper_setup
+    seeds = np.arange(8)
+    static = throughput_from_result(
+        simulate_paths(paper_compiled, flows, seeds,
+                       strategy=PrimeSpraying(8)),
+        transport="roce-nack")
+    adaptive = throughput_from_result(
+        simulate_paths(paper_compiled, flows, seeds,
+                       strategy=AdaptiveSpraying(8)),
+        transport="roce-nack")
+    assert adaptive.goodput.mean() > static.goodput.mean()
+    # the adaptation really moved flowlets and really paid for it
+    res = simulate_paths(paper_compiled, flows, seeds,
+                         strategy=AdaptiveSpraying(8))
+    assert res.extra_exposure is not None and res.extra_exposure.max() > 0
+
+
+def test_adaptive_charges_respray_exposure(paper_compiled,
+                                           paper_setup_small):
+    """Each accepted move costs ``respray_cost`` x flowlet demand: the
+    same routed tensor under a doubled cost parameter reports exactly
+    doubled extra exposure, and goodput can only go down."""
+    from repro.core import AdaptiveSpraying
+    _, _, flows = paper_setup_small
+    seeds = np.arange(4)
+    cheap = simulate_paths(paper_compiled, flows, seeds,
+                           strategy=AdaptiveSpraying(8, respray_cost=0.05))
+    dear = simulate_paths(paper_compiled, flows, seeds,
+                          strategy=AdaptiveSpraying(8, respray_cost=0.10))
+    np.testing.assert_array_equal(cheap.link_ids, dear.link_ids)
+    np.testing.assert_allclose(dear.extra_exposure,
+                               2.0 * cheap.extra_exposure)
+    g_cheap = throughput_from_result(cheap, transport="roce-nack")
+    g_dear = throughput_from_result(dear, transport="roce-nack")
+    assert g_dear.goodput.mean() <= g_cheap.goodput.mean()
+
+
 # ---------------------------------------------------------------------------
 # weighted max-min: differential vs a scalar weighted reference
 # ---------------------------------------------------------------------------
