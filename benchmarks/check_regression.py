@@ -43,7 +43,10 @@ def shape_key(payload: dict, row: dict) -> tuple:
     present (``benchmarks/run.py`` stamps it per row, because a subset
     run carries other benches' rows over from an earlier run that may
     have used a different override) and falls back to the payload-level
-    field for pre-stamp history files."""
+    field for pre-stamp history files.  The ``engine`` tag (numpy/jax
+    compute backend, absent on host-only rows) is part of the identity:
+    a numpy baseline must never absorb a jax timing of the same name and
+    shape, or a backend swap would read as a 10x "regression"."""
     metrics = row.get("metrics", {})
     return (
         row.get("name"),
@@ -51,6 +54,7 @@ def shape_key(payload: dict, row: dict) -> tuple:
                 payload.get("bench_seeds_override")),
         metrics.get("seeds"),
         metrics.get("flows"),
+        row.get("engine"),
     )
 
 
@@ -66,8 +70,9 @@ def timed_rows(payload: dict) -> dict[tuple, float]:
 
 
 def describe_key(key: tuple) -> str:
-    name, override, seeds, flows = key
-    return f"{name} [BENCH_SEEDS={override} seeds={seeds} flows={flows}]"
+    name, override, seeds, flows, engine = key
+    tag = f" engine={engine}" if engine is not None else ""
+    return f"{name} [BENCH_SEEDS={override} seeds={seeds} flows={flows}{tag}]"
 
 
 def orphaned_rows(old_payload: dict, new_payload: dict) -> list[tuple]:

@@ -53,11 +53,22 @@ def _parse_derived(derived: str) -> dict[str, float]:
     return out
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str, *,
+         engine: str | None = None) -> None:
+    """Print one CSV row and record it for BENCH_results.json.
+
+    ``engine`` tags rows whose timing depends on the compute backend
+    ("numpy" / "jax"); it is part of the regression-guard identity, so a
+    numpy baseline row is never compared against a jax measurement of
+    the same name and shape.  Untagged rows (the host-only benches) stay
+    backend-agnostic and keep matching historical baselines."""
     print(f"{name},{us_per_call:.1f},{derived}")
-    RESULTS.append({
+    row = {
         "name": name,
         "us_per_call": round(us_per_call, 1),
         "derived": derived,
         "metrics": _parse_derived(derived),
-    })
+    }
+    if engine is not None:
+        row["engine"] = engine
+    RESULTS.append(row)

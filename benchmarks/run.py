@@ -23,8 +23,8 @@ import traceback
 from . import (
     bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
     fig4_thread_scaling, fig5_connection_strategies, goodput, hetero_demand,
-    monte_carlo_fim, placement_ablation, roofline, throughput_sweep,
-    timeline, vxlan_entropy,
+    jax_engine, monte_carlo_fim, placement_ablation, roofline,
+    throughput_sweep, timeline, vxlan_entropy,
 )
 from .common import RESULTS
 
@@ -39,6 +39,7 @@ BENCHES = {
     "monte_carlo": monte_carlo_fim.run,
     "throughput": throughput_sweep.run,
     "timeline": timeline.run,
+    "jax_engine": jax_engine.run,
     "placement": placement_ablation.run,
     "vxlan": vxlan_entropy.run,
     "roofline": roofline.run,

@@ -2,8 +2,10 @@
 
 Fabric model + ECMP/static routing + Flow Imbalance Metric + the parallel
 hop-by-hop path-discovery algorithm + compiled-HLO flow extraction +
-topology-aware placement.  Deliberately jax-free (jax enters only through
-the text of compiled HLO) so tracer worker processes stay lightweight.
+topology-aware placement.  Importing the package stays jax-free so tracer
+worker processes remain lightweight: the device engine
+(``core.jax_engine``, selected via ``engine="jax"`` on the Monte-Carlo
+front ends) imports jax lazily, only when actually asked to run.
 """
 
 from .fabric import (
@@ -25,6 +27,7 @@ from .vector_sim import (
     VectorTraceResult, MonteCarloFim, simulate_paths, fim_from_counts,
     fim_vector, monte_carlo_fim, resolve_flows,
     DEMAND_UNIFORM, DEMAND_BYTES, flow_demand_weights,
+    ENGINE_NUMPY, ENGINE_JAX, resolve_hash_backend,
 )
 from .vector_throughput import (
     MonteCarloThroughput, batched_max_min, max_min_rates,
@@ -86,6 +89,7 @@ __all__ = [
     "VectorTraceResult", "MonteCarloFim", "simulate_paths", "fim_from_counts",
     "fim_vector", "monte_carlo_fim", "resolve_flows",
     "DEMAND_UNIFORM", "DEMAND_BYTES", "flow_demand_weights",
+    "ENGINE_NUMPY", "ENGINE_JAX", "resolve_hash_backend",
     "MonteCarloThroughput", "batched_max_min", "max_min_rates",
     "flow_rates_from_flowlets", "pair_rate_matrix", "throughput_from_result",
     "monte_carlo_throughput",

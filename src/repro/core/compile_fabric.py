@@ -52,6 +52,11 @@ class CompiledFabric:
     # NIC keys: one per (server, nic index), i.e. one per NIC IP
     key_of_ip: dict[str, int]       # nic ip -> key id
     key_server: np.ndarray          # (K,) int32  device id owning the key
+    #: distinct NIC indices present on the fabric's servers, sorted — the
+    #: authoritative record of the NIC plan (``resolve_flows`` synthesizes
+    #: against it; sparse numbering like (0, 4) survives, where re-parsing
+    #: IP strings for a max would invent NICs that do not exist)
+    nic_indices: tuple[int, ...]
     # candidate tables
     cand: np.ndarray                # (V, K, C_max) int32 link ids, -1 padded
     cand_n: np.ndarray              # (V, K) int32  candidate count
@@ -144,6 +149,7 @@ def compile_fabric(fabric: Fabric) -> CompiledFabric:
         link_gbps=link_gbps,
         key_of_ip=key_of_ip,
         key_server=key_server,
+        nic_indices=tuple(sorted({nic for _, nic in nic_keys})),
         cand=cand,
         cand_n=cand_n,
     )

@@ -1,0 +1,738 @@
+"""Device-resident JAX engine: walk -> counts/FIM -> max-min fill -> goodput.
+
+The numpy engine (``vector_sim`` / ``vector_throughput`` / ``reordering``)
+is the differential reference; this module re-expresses the same hot path
+as jitted jax so a pod-scale sweep (100k flows x 10k seeds) runs on the
+accelerator with no host round-trips between stages:
+
+* the per-hop ECMP/flowlet walk is a ``lax.while_loop`` over the (N, S)
+  current-device grid — bit-identical to ``vector_sim.ecmp_walk`` under
+  the exact splitmix64 backend (uint64 wraparound is exact under x64);
+* link counts ride one ``segment_sum`` over the link-id tensor, and the
+  per-layer FIM (MAPE vs per-layer ideal) is a handful of masked
+  reductions per layer;
+* the weighted progressive max-min fill keeps the numpy engine's
+  parallel local-bottleneck formulation, as a ``lax.while_loop`` whose
+  body is segment ops over (seed, link) cells — frozen columns park
+  their cells on the sentinel slot instead of compacting, which keeps
+  every shape static under jit;
+* flowlet exposure -> transport efficiency -> goodput fuse on top as
+  per-parent segment reductions.
+
+Hash backends: ``"exact"`` is the splitmix64 chain (bit-identical to the
+Python tracer, and to the numpy engine — the differential contract).
+``"murmur"`` is the murmur3 avalanche shared with ``kernels/flowhash``
+(the Pallas ``bulk_hash`` kernel on TPU, the same fold/fmix formulas as
+jnp elsewhere); it is the default for real accelerator backends, where
+64-bit multiplies are slow or unsupported.  ``default_hash_backend``
+encodes that policy.
+
+Everything here enters through ``jax.experimental.enable_x64`` as a
+*scoped* context (never the global flag): the exact backend needs uint64
+and the fill needs float64, but flipping x64 globally would change
+default dtypes for every other jax user in the process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections.abc import Sequence
+
+import numpy as np
+
+from .compile_fabric import CompiledFabric, compile_fabric
+from .ecmp import FIELDS_5TUPLE, HASH_INIT, flow_fields_matrix
+from .fabric import Fabric
+from .flows import Flow, WorkloadDescription
+from .vector_sim import (
+    DEMAND_UNIFORM, EXACT, MURMUR, MonteCarloFim, VectorTraceResult,
+    flow_demand_weights, normalize_seeds, resolve_flows,
+)
+
+__all__ = [
+    "ENGINE_NUMPY", "ENGINE_JAX", "default_hash_backend",
+    "jax_ecmp_walk", "jax_link_flow_counts", "jax_fim_from_counts",
+    "jax_batched_max_min", "jax_flowlet_exposure",
+    "fused_monte_carlo_fim", "fused_monte_carlo_throughput",
+]
+
+ENGINE_NUMPY = "numpy"
+ENGINE_JAX = "jax"
+
+# Seeds per device pass in the fused front ends: caps the transient
+# (max_hops, N, Sc) int32 walk tensor at ~0.5 GB for 100k-flow sweeps
+# (16 * 100k * 8192 * 4B).  Chunking re-enters the same jitted functions
+# (shapes repeat), so it costs one dispatch per chunk, not a recompile.
+_FUSED_SEED_CHUNK_CELLS = 100_000 * 8192
+
+
+def _jx():
+    """Lazy jax import bundle — core stays importable (and the numpy
+    engine usable) on hosts without jax."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    return jax, jnp, lax
+
+
+def _x64():
+    from jax.experimental import enable_x64
+    return enable_x64()
+
+
+def default_hash_backend(engine: str = ENGINE_JAX) -> str:
+    """Backend policy when the caller doesn't pin one: the numpy engine
+    (and jax-on-CPU, where CI differential tests run) keep the exact
+    tracer-identical splitmix64; real accelerator backends default to the
+    TPU-native murmur kernel path."""
+    if engine != ENGINE_JAX:
+        return EXACT
+    import jax
+    return MURMUR if jax.default_backend() in ("tpu", "gpu") else EXACT
+
+
+def resolve_engine(engine: str) -> str:
+    if engine not in (ENGINE_NUMPY, ENGINE_JAX):
+        raise ValueError(
+            f"unknown engine {engine!r}; "
+            f"expected {ENGINE_NUMPY!r} or {ENGINE_JAX!r}")
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# Compiled-fabric tables on device (cached per CompiledFabric instance)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _DeviceTables:
+    cand: object
+    cand_n: object
+    dev_crc: object
+    is_server: object
+    link_dst: object
+    link_gbps: object
+
+
+_TABLE_CACHE: dict[int, tuple[object, _DeviceTables]] = {}
+
+
+def device_tables(comp: CompiledFabric) -> _DeviceTables:
+    """Device copies of the forwarding tables, uploaded once per compiled
+    fabric (keyed by identity — CompiledFabric is frozen, and the weakref
+    anchor in the cache value keeps ids from being recycled under us)."""
+    hit = _TABLE_CACHE.get(id(comp))
+    if hit is not None and hit[0] is comp:
+        return hit[1]
+    _, jnp, _ = _jx()
+    tabs = _DeviceTables(
+        cand=jnp.asarray(comp.cand),
+        cand_n=jnp.asarray(comp.cand_n),
+        dev_crc=jnp.asarray(comp.dev_crc),
+        is_server=jnp.asarray(comp.is_server),
+        link_dst=jnp.asarray(comp.link_dst),
+        link_gbps=jnp.asarray(np.asarray(comp.link_gbps, np.float64)),
+    )
+    if len(_TABLE_CACHE) > 16:
+        _TABLE_CACHE.clear()
+    _TABLE_CACHE[id(comp)] = (comp, tabs)
+    return tabs
+
+
+# ---------------------------------------------------------------------------
+# Hash grids (device twins of vector_sim.hash_grid)
+# ---------------------------------------------------------------------------
+
+
+def _mix64_j(x):
+    _, jnp, _ = _jx()
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    return x ^ (x >> jnp.uint64(31))
+
+
+def _exact_grid_j(fields, dev_seed):
+    """splitmix64 over (N, F) fields x (N, S) device seeds -> (N, S)
+    uint64 — the exact ``ecmp_hash_vec`` chain, bit-identical under x64."""
+    _, jnp, _ = _jx()
+    h = _mix64_j(dev_seed ^ jnp.uint64(HASH_INIT))
+    for f in range(fields.shape[1]):
+        h = _mix64_j(h ^ fields[:, f][:, None])
+    return h
+
+
+def _murmur_grid_j(fields, dev_seed):
+    """murmur3 grid with the per-(flow, seed) device seed as the hash
+    init — the seed-as-init convention shared with ``bulk_hash`` (whose
+    scalar seed is the same init broadcast) and the numpy murmur grid."""
+    from ..kernels.flowhash.kernel import murmur_fmix, murmur_fold
+    _, jnp, _ = _jx()
+    h = (dev_seed & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    f32 = fields.astype(jnp.uint32)
+    for f in range(fields.shape[1]):
+        h = murmur_fold(h, f32[:, f][:, None])
+    return murmur_fmix(h).astype(jnp.uint64)
+
+
+def _hash_grid_j(fields, dev_seed, hash_backend: str):
+    if hash_backend == EXACT:
+        return _exact_grid_j(fields, dev_seed)
+    if hash_backend == MURMUR:
+        return _murmur_grid_j(fields, dev_seed)
+    raise ValueError(f"unknown hash backend: {hash_backend}")
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: the walk (lax.while_loop over the (N, S) device grid)
+# ---------------------------------------------------------------------------
+
+
+def _walk_jit():
+    jax, jnp, lax = _jx()
+
+    @functools.partial(
+        jax.jit, static_argnames=("max_hops", "hash_backend", "n_fields"))
+    def walk(cand, cand_n, dev_crc, is_server, link_dst,
+             src_dev, src_key, dst_key, fields, seeds, cell_salt,
+             *, max_hops: int, hash_backend: str, n_fields: int):
+        N, S = src_dev.shape[0], seeds.shape[0]
+        state0 = jnp.broadcast_to(
+            src_dev[:, None].astype(jnp.int32), (N, S))
+        done0 = jnp.zeros((N, S), bool)
+        ids0 = jnp.full((max_hops, N, S), -1, jnp.int32)
+
+        def cond(c):
+            t, state, done, ids = c
+            return (t < max_hops) & ~done.all()
+
+        def body(c):
+            t, state, done, ids = c
+            # src-keyed on the source host (hop 0), dst-keyed at switches
+            key = jnp.where(is_server[state], src_key[:, None],
+                            dst_key[:, None])
+            n = cand_n[state, key]
+            dev_seed = dev_crc[state] ^ seeds[None, :]
+            if cell_salt is not None:
+                dev_seed = dev_seed ^ cell_salt
+            h = _hash_grid_j(fields, dev_seed, hash_backend)
+            safe_n = jnp.maximum(n, 1).astype(jnp.uint64)
+            choice = jnp.where(n > 1, (h % safe_n).astype(jnp.int32), 0)
+            link = cand[state, key, choice]
+            link = jnp.where(done | (n == 0), -1, link)
+            ids = lax.dynamic_update_index_in_dim(ids, link, t, 0)
+            nxt = jnp.where(link >= 0, link_dst[jnp.maximum(link, 0)], state)
+            done = done | (link < 0) | is_server[nxt]
+            return t + 1, nxt, done, ids
+
+        t, state, done, ids = lax.while_loop(
+            cond, body, (jnp.int32(0), state0, done0, ids0))
+        return ids, state, done, t
+
+    return walk
+
+
+@functools.lru_cache(maxsize=1)
+def _walk_fn():
+    return _walk_jit()
+
+
+def _jax_walk_device(comp, src_dev, src_key, dst_key, field_mat, seeds_u64,
+                     *, hash_backend, max_hops, cell_salt=None):
+    """Run the walk on device; returns device (max_hops, N, S) link ids,
+    final state, done mask, and the hop-count scalar (all device-side)."""
+    _, jnp, _ = _jx()
+    tabs = device_tables(comp)
+    salt = None if cell_salt is None else jnp.asarray(cell_salt)
+    return _walk_fn()(
+        tabs.cand, tabs.cand_n, tabs.dev_crc, tabs.is_server, tabs.link_dst,
+        jnp.asarray(src_dev), jnp.asarray(src_key), jnp.asarray(dst_key),
+        jnp.asarray(field_mat), jnp.asarray(seeds_u64), salt,
+        max_hops=max_hops, hash_backend=hash_backend,
+        n_fields=int(field_mat.shape[1]))
+
+
+def _check_walk(comp, state, dst_dev, describe):
+    """The numpy engine's arrival contract (termination is checked on
+    the ``done`` scalar before this runs); state is (N, S)-small, so the
+    host pull costs nothing next to the link-id tensor it replaces."""
+    state = np.asarray(state)
+    arrived = state == np.broadcast_to(
+        np.asarray(dst_dev)[:, None], state.shape)
+    if not arrived.all():
+        bad = np.argwhere(~arrived)[0]
+        raise RuntimeError(
+            f"{describe(bad[0])} (seed index {bad[1]}) terminated "
+            f"at {comp.device_names[state[bad[0], bad[1]]]}")
+
+
+def jax_ecmp_walk(
+    comp: CompiledFabric,
+    src_dev: np.ndarray,
+    dst_dev: np.ndarray,
+    src_key: np.ndarray,
+    dst_key: np.ndarray,
+    field_mat: np.ndarray,
+    seeds_u64: np.ndarray,
+    *,
+    hash_backend: str = EXACT,
+    max_hops: int = 16,
+    cell_salt: np.ndarray | None = None,
+    describe=lambda n: f"column {n}",
+) -> np.ndarray:
+    """Drop-in twin of ``vector_sim.ecmp_walk`` on the jax engine:
+    same signature, same (hops, N, S) numpy result, same termination
+    errors — bit-identical under ``hash_backend="exact"``."""
+    with _x64():
+        ids, state, done, t = _jax_walk_device(
+            comp, src_dev, src_key, dst_key, field_mat, seeds_u64,
+            hash_backend=hash_backend, max_hops=max_hops,
+            cell_salt=cell_salt)
+        hops = int(t)
+        if not bool(done.all()):
+            raise RuntimeError(
+                f"some flows did not terminate in {max_hops} hops")
+        _check_walk(comp, state, dst_dev, describe)
+        return np.asarray(ids[:hops])
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: link counts + FIM (segment_sum + per-layer MAPE)
+# ---------------------------------------------------------------------------
+
+
+def _counts_jit():
+    jax, jnp, _ = _jx()
+
+    @functools.partial(jax.jit, static_argnames=("L",))
+    def counts_fn(ids, weights, *, L: int):
+        # ids: (H, Nf, S) device link ids; weights: (Nf,) or None-ones
+        H, Nf, S = ids.shape
+        offs = jnp.arange(S, dtype=jnp.int32) * jnp.int32(L)
+        flat = jnp.where(ids >= 0, ids + offs[None, None, :], S * L)
+        w = jnp.broadcast_to(weights[None, :, None], ids.shape)
+        w = jnp.where(ids >= 0, w, 0.0)
+        c = jax.ops.segment_sum(w.ravel(), flat.ravel(),
+                                num_segments=S * L + 1)
+        return c[: S * L].reshape(S, L)
+
+    return counts_fn
+
+
+@functools.lru_cache(maxsize=1)
+def _counts_fn():
+    return _counts_jit()
+
+
+def jax_link_flow_counts(ids, weights, L: int):
+    """(S, L) demand-weighted link loads from a device (H, Nf, S) link-id
+    tensor — twin of ``VectorTraceResult.link_flow_counts``."""
+    _, jnp, _ = _jx()
+    return _counts_fn()(ids, jnp.asarray(np.asarray(weights, np.float64)),
+                        L=L)
+
+
+def _fim_jit():
+    jax, jnp, _ = _jx()
+
+    @functools.partial(jax.jit,
+                       static_argnames=("only_used_leaves", "num_devices"))
+    def fim_fn(counts, layer_sel, link_src, link_dst,
+               *, only_used_leaves: bool, num_devices: int):
+        # counts: (S, L) float; layer_sel: (NL, L) bool one-hot per layer
+        S, L = counts.shape
+        if only_used_leaves:
+            present = counts > 0
+            used_src = jax.ops.segment_max(
+                present.astype(jnp.int32).T, link_src,
+                num_segments=num_devices)          # (V, S)
+            used_dst = jax.ops.segment_max(
+                present.astype(jnp.int32).T, link_dst,
+                num_segments=num_devices)
+            used = (jnp.maximum(used_src, used_dst) > 0)   # (V, S)
+            leaf_mask = (used[link_src] & used[link_dst]).T  # (S, L)
+        else:
+            leaf_mask = jnp.ones((S, L), bool)
+
+        num = jnp.zeros(S)
+        den = jnp.zeros(S)
+        mapes = []
+        for li in range(layer_sel.shape[0]):
+            lm = layer_sel[li][None, :]            # (1, L)
+            mask = (lm & leaf_mask).astype(jnp.float64)
+            n_links = mask.sum(axis=1)
+            total = (counts * mask).sum(axis=1)
+            live = (total > 0) & (n_links > 0)
+            ideal = jnp.where(live, total / jnp.maximum(n_links, 1), 1.0)
+            mape = (100.0 / jnp.maximum(n_links, 1)
+                    * (jnp.abs(counts - ideal[:, None])
+                       / ideal[:, None] * mask).sum(1))
+            mape = jnp.where(live, mape, 0.0)
+            mapes.append((mape, live))
+            num = num + jnp.where(live, mape * n_links, 0.0)
+            den = den + jnp.where(live, n_links, 0.0)
+        agg = jnp.where(den > 0, num / jnp.maximum(den, 1.0), 0.0)
+        return agg, [m for m, _ in mapes], [lv for _, lv in mapes]
+
+    return fim_fn
+
+
+@functools.lru_cache(maxsize=1)
+def _fim_fn():
+    return _fim_jit()
+
+
+def jax_fim_from_counts(
+    counts,
+    comp: CompiledFabric,
+    *,
+    layers: Sequence[str] | None = None,
+    only_used_leaves: bool = False,
+) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+    """Twin of ``vector_sim.fim_from_counts`` on a device (S, L) count
+    matrix; returns host arrays with the same layer-dropping semantics."""
+    _, jnp, _ = _jx()
+    layer_list = list(layers) if layers else comp.layer_names
+    names, sels = [], []
+    for layer in layer_list:
+        if layer not in comp.layer_names:
+            continue
+        lid = comp.layer_names.index(layer)
+        sel = comp.link_layer == lid
+        if not sel.any():
+            continue
+        names.append(layer)
+        sels.append(sel)
+    if not names:
+        S = int(counts.shape[0])
+        return np.zeros(S), {}
+    agg, mapes, lives = _fim_fn()(
+        counts, jnp.asarray(np.stack(sels)),
+        jnp.asarray(comp.link_src), jnp.asarray(comp.link_dst),
+        only_used_leaves=only_used_leaves, num_devices=comp.num_devices)
+    per_layer: dict[str, np.ndarray] = {}
+    for name, mape, live in zip(names, mapes, lives):
+        if bool(np.asarray(live).any()):   # all-dead layers are dropped
+            per_layer[name] = np.asarray(mape)
+    return np.asarray(agg), per_layer
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: weighted progressive max-min fill (lax.while_loop + segment ops)
+# ---------------------------------------------------------------------------
+
+
+def _fill_jit():
+    jax, jnp, lax = _jx()
+
+    @functools.partial(jax.jit, static_argnames=("SL",))
+    def fill(cells, w, cap, *, SL: int):
+        """cells: (H, C) int32 cell ids in [0, SL] (SL = sentinel),
+        w: (C,) float64 positive weights, cap: (SL,) float64 capacity.
+        Returns (C,) max-min rates; all-sentinel columns get inf.
+
+        Same parallel local-bottleneck formulation as the numpy
+        ``_fill_block_weighted``: freeze every flow crossing a cell whose
+        fair share equals the min share on every member's path, drain,
+        repeat.  The loop body is deliberately scatter-free: XLA's CPU
+        scatter (behind ``jax.ops.segment_*``) is orders of magnitude
+        slower than a gather, so the cell ids are sorted ONCE up front
+        and every per-round segment reduction becomes cumsum-at-static-
+        boundaries; frozen-ness lives in per-column masks instead of
+        rewriting ids, keeping every id-derived index static.  The
+        bottleneck test ``segment_min(fm) == share`` is replaced by the
+        equivalent ``count(fm < share) == 0`` (``fm <= share`` always
+        holds, since the cell's own share enters the min), which is a
+        sum — and therefore cumsum-able.
+        """
+        H, C = cells.shape
+        flat = cells.ravel()                       # static per call
+        order = jnp.argsort(flat)
+        scol = order % C                           # column of sorted cell
+        sflat = flat[order]
+        bounds = jnp.searchsorted(sflat, jnp.arange(SL + 2))
+        valid_s = sflat < SL                       # real-link cells
+        wB_s = w[scol]
+
+        def segsum(v_s):                           # (H*C,) sorted -> (SL+1,)
+            c = jnp.concatenate([jnp.zeros(1), jnp.cumsum(v_s)])
+            return c[bounds[1:]] - c[bounds[:-1]]
+
+        residual0 = jnp.concatenate([cap, jnp.zeros(1)])
+        haslink = (cells < SL).any(axis=0)
+        rates0 = jnp.where(haslink, 0.0, jnp.inf)
+
+        def cond(c):
+            return c[0].any()
+
+        def body(c):
+            active, residual, rates = c
+            act_s = active[scol] & valid_s
+            wsum = segsum(jnp.where(act_s, wB_s, 0.0))
+            share = jnp.where(wsum > 0,
+                              residual / jnp.maximum(wsum, 1e-300), jnp.inf)
+            share = share.at[SL].set(jnp.inf)
+            fm = share[cells].min(axis=0)          # per-flow bottleneck
+            less = segsum(jnp.where(
+                act_s & (fm[scol] < share[sflat]), 1.0, 0.0))
+            freezable = (less == 0) & (wsum > 0)
+            freezable = freezable.at[SL].set(False)
+            fz = freezable[cells].any(axis=0) & active
+            rates = jnp.where(fz, w * fm, rates)
+            drained = segsum(jnp.where(
+                fz[scol] & valid_s, wB_s * fm[scol], 0.0))
+            return active & ~fz, residual - drained, rates
+
+        out = lax.while_loop(cond, body, (haslink, residual0, rates0))
+        return out[2]
+
+    return fill
+
+
+@functools.lru_cache(maxsize=1)
+def _fill_fn():
+    return _fill_jit()
+
+
+def _fill_device(ids, link_gbps, weights, *, L: int):
+    """Run the fill on a device (H, N, S) link-id tensor; returns the
+    device (N, S) rate grid."""
+    _, jnp, _ = _jx()
+    H, N, S = ids.shape
+    SL = S * L
+    offs = jnp.arange(S, dtype=jnp.int32) * jnp.int32(L)
+    cells = jnp.where(ids >= 0, ids + offs[None, None, :], SL)
+    cells = cells.transpose(0, 2, 1).reshape(H, S * N)   # seed-major cols
+    w = jnp.tile(jnp.asarray(np.asarray(weights, np.float64)), S)
+    cap = jnp.tile(jnp.asarray(np.asarray(link_gbps, np.float64)), S)
+    rates = _fill_fn()(cells, w, cap, SL=SL)
+    return rates.reshape(S, N).T                         # (N, S)
+
+
+def jax_batched_max_min(
+    link_ids: np.ndarray,
+    link_gbps: np.ndarray,
+    *,
+    assume_unique: bool = False,
+    weights: np.ndarray | None = None,
+) -> np.ndarray:
+    """Drop-in twin of ``vector_throughput.batched_max_min`` on the jax
+    engine (the ``seed_block`` knob does not apply: the device fill runs
+    all seeds in one static-shape pass)."""
+    link_ids = np.asarray(link_ids)
+    if link_ids.ndim != 3:
+        raise ValueError(f"link_ids must be (H, N, S), got {link_ids.shape}")
+    if not assume_unique:
+        from .vector_throughput import dedup_link_ids
+        link_ids = dedup_link_ids(link_ids)
+    H, N, S = link_ids.shape
+    if weights is not None:
+        weights = np.asarray(weights, np.float64)
+        if weights.shape != (N,):
+            raise ValueError(
+                f"weights must be ({N},) to match link_ids columns, "
+                f"got {weights.shape}")
+        if not (weights > 0).all():
+            raise ValueError("weights must be strictly positive")
+    if weights is None:
+        weights = np.ones(N)
+    if H == 0 or N == 0 or S == 0:
+        out = np.empty((N, S))
+        out[:] = np.inf if H == 0 else 0.0
+        return out
+    with _x64():
+        _, jnp, _ = _jx()
+        rates = _fill_device(jnp.asarray(link_ids),
+                             np.asarray(link_gbps, np.float64),
+                             weights, L=len(link_gbps))
+        return np.asarray(rates)
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: flowlet exposure -> transport efficiency -> goodput
+# ---------------------------------------------------------------------------
+
+
+def _exposure_jit():
+    jax, jnp, _ = _jx()
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def exposure_fn(hop_counts, unit_rates, fi, *, n: int):
+        # hop_counts/unit_rates: (Nf, S); fi: (Nf,) parent rows
+        hops = hop_counts.astype(jnp.float64)
+        hmin = jax.ops.segment_min(hops, fi, num_segments=n)
+        hmax = jax.ops.segment_max(hops, fi, num_segments=n)
+        skew = (hmax - hmin) / jnp.maximum(hmin, 1.0)
+        finite = jnp.isfinite(unit_rates)
+        rmin = jax.ops.segment_min(
+            jnp.where(finite, unit_rates, jnp.inf), fi, num_segments=n)
+        rmax = jax.ops.segment_max(
+            jnp.where(finite, unit_rates, -jnp.inf), fi, num_segments=n)
+        live = jnp.isfinite(rmax) & (rmax > 0)
+        dispersion = jnp.where(
+            live, (rmax - jnp.where(live, rmin, 0.0))
+            / jnp.where(live, rmax, 1.0), 0.0)
+        exposure = skew + dispersion
+        return jnp.where(jnp.isfinite(exposure), exposure, 0.0)
+
+    return exposure_fn
+
+
+@functools.lru_cache(maxsize=1)
+def _exposure_fn():
+    return _exposure_jit()
+
+
+def jax_flowlet_exposure(
+    result: VectorTraceResult,
+    flowlet_rates: np.ndarray | None = None,
+) -> np.ndarray:
+    """Twin of ``reordering.flowlet_exposure`` on the jax engine."""
+    n, s = result.num_flows, result.num_seeds
+    extra = result.extra_exposure
+    fi = np.asarray(result.flow_index)
+    if not result.is_multipath and fi.size == n and (
+            fi == np.arange(n)).all():
+        base = np.zeros((n, s))
+        return base if extra is None else base + extra
+    if flowlet_rates is None:
+        flowlet_rates = jax_batched_max_min(
+            result.link_ids, result.compiled.link_gbps,
+            assume_unique=True, weights=_column_weights_or_none(result))
+    with _x64():
+        _, jnp, _ = _jx()
+        unit = np.asarray(flowlet_rates) / result.column_weights()[:, None]
+        exposure = np.asarray(_exposure_fn()(
+            jnp.asarray(result.hop_counts()), jnp.asarray(unit),
+            jnp.asarray(fi.astype(np.int32)), n=n))
+    return exposure if extra is None else exposure + extra
+
+
+def _column_weights_or_none(result: VectorTraceResult):
+    w = result.column_weights()
+    return None if (w == 1.0).all() else w
+
+
+# ---------------------------------------------------------------------------
+# Fused front ends (plain-ECMP fast path: everything stays on device)
+# ---------------------------------------------------------------------------
+
+
+def _seed_chunks(n_flows: int, max_hops: int, S: int):
+    per = max(1, _FUSED_SEED_CHUNK_CELLS // max(1, n_flows))
+    for s0 in range(0, S, per):
+        yield s0, min(s0 + per, S)
+
+
+def _fused_walk_counts(comp, flows, seeds_u64, *, fields, hash_backend,
+                       max_hops, field_matrix, flow_demand):
+    """One device pass per seed chunk: walk + demand-weighted counts.
+    Returns the host (S, L) count matrix (small: seeds x links)."""
+    _, jnp, _ = _jx()
+    field_mat = (field_matrix if field_matrix is not None
+                 else flow_fields_matrix(flows, fields))
+    src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
+    L = comp.num_links
+    out = np.empty((len(seeds_u64), L))
+    for s0, s1 in _seed_chunks(len(flows), max_hops, len(seeds_u64)):
+        ids, state, done, t = _jax_walk_device(
+            comp, src_dev, src_key, dst_key, field_mat, seeds_u64[s0:s1],
+            hash_backend=hash_backend, max_hops=max_hops)
+        if not bool(done.all()):
+            raise RuntimeError(
+                f"some flows did not terminate in {max_hops} hops")
+        _check_walk(comp, state, dst_dev,
+                    lambda n: f"flow {flows[n].flow_id}")
+        ids = ids[: int(t)]
+        out[s0:s1] = np.asarray(
+            jax_link_flow_counts(ids, flow_demand, L))
+    return out
+
+
+def fused_monte_carlo_fim(
+    fabric: Fabric | CompiledFabric,
+    workload: WorkloadDescription | Sequence[Flow],
+    seeds: Sequence[int] | np.ndarray,
+    *,
+    fields: str = FIELDS_5TUPLE,
+    hash_backend: str = EXACT,
+    layers: Sequence[str] | None = None,
+    only_used_leaves: bool = False,
+    demand_mode: str = DEMAND_UNIFORM,
+    max_hops: int = 16,
+    field_matrix: np.ndarray | None = None,
+) -> MonteCarloFim:
+    """Plain-ECMP Monte-Carlo FIM with walk + counts + FIM on device."""
+    comp = (fabric if isinstance(fabric, CompiledFabric)
+            else compile_fabric(fabric))
+    flows = resolve_flows(comp, workload)
+    seeds_u64 = normalize_seeds(seeds)
+    if len(flows) == 0:
+        raise ValueError("simulate_paths needs at least one flow")
+    flow_demand = flow_demand_weights(flows, demand_mode)
+    with _x64():
+        _, jnp, _ = _jx()
+        counts = _fused_walk_counts(
+            comp, flows, seeds_u64, fields=fields,
+            hash_backend=hash_backend, max_hops=max_hops,
+            field_matrix=field_matrix, flow_demand=flow_demand)
+        agg, per_layer = jax_fim_from_counts(
+            jnp.asarray(counts), comp, layers=layers,
+            only_used_leaves=only_used_leaves)
+    return MonteCarloFim(seeds=seeds_u64, aggregate=agg,
+                         per_layer=per_layer)
+
+
+def fused_monte_carlo_throughput(
+    fabric: Fabric | CompiledFabric,
+    workload: WorkloadDescription | Sequence[Flow],
+    seeds: Sequence[int] | np.ndarray,
+    *,
+    fields: str = FIELDS_5TUPLE,
+    hash_backend: str = EXACT,
+    demand_mode: str = DEMAND_UNIFORM,
+    transport=None,
+    max_hops: int = 16,
+    field_matrix: np.ndarray | None = None,
+):
+    """Plain-ECMP Monte-Carlo throughput with walk + fill on device.
+
+    Single-path ECMP has zero flowlet exposure, so (exactly like the
+    numpy fast path) goodput is the raw rate grid under every transport
+    profile — the exposure/efficiency stages engage through
+    ``throughput_from_result(engine="jax")`` for multi-path strategies.
+    """
+    from .reordering import resolve_transport
+    from .vector_throughput import MonteCarloThroughput, pair_rate_matrix
+    comp = (fabric if isinstance(fabric, CompiledFabric)
+            else compile_fabric(fabric))
+    flows = resolve_flows(comp, workload)
+    seeds_u64 = normalize_seeds(seeds)
+    if len(flows) == 0:
+        raise ValueError("simulate_paths needs at least one flow")
+    flow_demand = flow_demand_weights(flows, demand_mode)
+    profile = resolve_transport(transport)
+    field_mat = (field_matrix if field_matrix is not None
+                 else flow_fields_matrix(flows, fields))
+    src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
+    N, S, L = len(flows), len(seeds_u64), comp.num_links
+    rates = np.empty((N, S))
+    with _x64():
+        for s0, s1 in _seed_chunks(N, max_hops, S):
+            ids, state, done, t = _jax_walk_device(
+                comp, src_dev, src_key, dst_key, field_mat,
+                seeds_u64[s0:s1], hash_backend=hash_backend,
+                max_hops=max_hops)
+            if not bool(done.all()):
+                raise RuntimeError(
+                    f"some flows did not terminate in {max_hops} hops")
+            _check_walk(comp, state, dst_dev,
+                        lambda n: f"flow {flows[n].flow_id}")
+            ids = ids[: int(t)]
+            rates[:, s0:s1] = np.asarray(_fill_device(
+                ids, np.asarray(comp.link_gbps, np.float64),
+                flow_demand, L=L))
+    pairs, per_pair = pair_rate_matrix(flows, rates)
+    return MonteCarloThroughput(
+        seeds=seeds_u64, flows=flows, rates=rates, pairs=pairs,
+        per_pair=per_pair, transport=profile.name)

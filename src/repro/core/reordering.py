@@ -216,8 +216,13 @@ for _p in (IDEAL, ROCE_NACK, STRACK):
 def flowlet_exposure(
     result: VectorTraceResult,
     flowlet_rates: np.ndarray | None = None,
+    engine: str = "numpy",
 ) -> np.ndarray:
     """(N, S) out-of-order exposure per flow per seed.
+
+    ``engine="jax"`` runs the per-parent segment reductions (and any
+    needed fill) on the device engine (``jax_engine.jax_flowlet_exposure``,
+    differential-tested at 1e-6 against this host path).
 
     ``flowlet_rates`` is the ``(Nf, S)`` per-column max-min rate tensor
     (``max_min_rates(result)``); passing it lets callers that already
@@ -232,6 +237,10 @@ def flowlet_exposure(
     static model's values bit-identical (``x + 0.0 == x`` for the
     non-negative exposures both terms produce).
     """
+    if engine != "numpy":
+        from .jax_engine import jax_flowlet_exposure, resolve_engine
+        resolve_engine(engine)
+        return jax_flowlet_exposure(result, flowlet_rates)
     n, s = result.num_flows, result.num_seeds
     extra = result.extra_exposure
     fi = np.asarray(result.flow_index)

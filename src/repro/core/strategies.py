@@ -50,8 +50,8 @@ from .compile_fabric import CompiledFabric
 from .ecmp import FIELDS_5TUPLE, flow_fields_matrix
 from .flows import Flow
 from .vector_sim import (
-    DEMAND_UNIFORM, EXACT, VectorTraceResult, ecmp_walk, flow_demand_weights,
-    hash_grid,
+    DEMAND_UNIFORM, ENGINE_NUMPY, EXACT, VectorTraceResult, ecmp_walk,
+    flow_demand_weights, hash_grid,
 )
 
 
@@ -81,6 +81,7 @@ class RoutingStrategy:
         max_hops: int = 16,
         field_matrix: np.ndarray | None = None,
         demand_mode: str = DEMAND_UNIFORM,
+        engine: str = ENGINE_NUMPY,
     ) -> VectorTraceResult:
         raise NotImplementedError
 
@@ -92,12 +93,12 @@ class EcmpStrategy(RoutingStrategy):
 
     def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
               hash_backend=EXACT, max_hops=16, field_matrix=None,
-              demand_mode=DEMAND_UNIFORM):
+              demand_mode=DEMAND_UNIFORM, engine=ENGINE_NUMPY):
         from .vector_sim import simulate_paths
         return simulate_paths(comp, flows, seeds_u64, fields=fields,
                               hash_backend=hash_backend, max_hops=max_hops,
                               field_matrix=field_matrix,
-                              demand_mode=demand_mode)
+                              demand_mode=demand_mode, engine=engine)
 
 
 def _balanced_parts(k: int) -> tuple[int, ...]:
@@ -196,7 +197,7 @@ class PrimeSpraying(RoutingStrategy):
 
     def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
               hash_backend=EXACT, max_hops=16, field_matrix=None,
-              demand_mode=DEMAND_UNIFORM):
+              demand_mode=DEMAND_UNIFORM, engine=ENGINE_NUMPY):
         field_mat = (field_matrix if field_matrix is not None
                      else flow_fields_matrix(flows, fields))
         n = len(flows)
@@ -227,6 +228,7 @@ class PrimeSpraying(RoutingStrategy):
             return ecmp_walk(
                 comp, *ep, fm, seeds_u64,
                 hash_backend=hash_backend, max_hops=max_hops,
+                engine=engine,
                 describe=lambda j: (
                     f"flow {flows[int(flow_index[cols[int(j)]])].flow_id} "
                     f"flowlet {int(local[cols[int(j)]])}"))
@@ -361,11 +363,11 @@ class AdaptiveSpraying(PrimeSpraying):
 
     def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
               hash_backend=EXACT, max_hops=16, field_matrix=None,
-              demand_mode=DEMAND_UNIFORM):
+              demand_mode=DEMAND_UNIFORM, engine=ENGINE_NUMPY):
         res = super().route(comp, flows, seeds_u64, fields=fields,
                             hash_backend=hash_backend, max_hops=max_hops,
                             field_matrix=field_matrix,
-                            demand_mode=demand_mode)
+                            demand_mode=demand_mode, engine=engine)
         if self.rounds == 1 or not res.is_multipath:
             return res                     # static spray / ECMP degenerate
         field_mat = (field_matrix if field_matrix is not None
@@ -393,7 +395,7 @@ class AdaptiveSpraying(PrimeSpraying):
         def walk(cell_salt):
             return ecmp_walk(
                 comp, *ep_s, fm_s, seeds_u64, hash_backend=hash_backend,
-                max_hops=max_hops, cell_salt=cell_salt,
+                max_hops=max_hops, cell_salt=cell_salt, engine=engine,
                 describe=lambda j: (
                     f"flow {flows[int(fi[spray_cols[int(j)]])].flow_id} "
                     f"respray flowlet {int(local[spray_cols[int(j)]])}"))
@@ -473,7 +475,13 @@ class CongestionAware(RoutingStrategy):
 
     def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
               hash_backend=EXACT, max_hops=16, field_matrix=None,
-              demand_mode=DEMAND_UNIFORM):
+              demand_mode=DEMAND_UNIFORM, engine=ENGINE_NUMPY):
+        # ``engine`` is accepted (front-end contract) but the placement
+        # loop itself stays host-side: greedy sequential routing is a
+        # data-dependent chain over flows (each placement reads the loads
+        # the previous ones wrote) — the wave-parallel variant in ROADMAP
+        # is the device-friendly reformulation.  Downstream fill/exposure
+        # still honor the engine via throughput_from_result(engine=).
         field_mat = (field_matrix if field_matrix is not None
                      else flow_fields_matrix(flows, fields))
         n, s = len(flows), len(seeds_u64)

@@ -58,7 +58,7 @@ from .ecmp import FIELDS_5TUPLE
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription
 from .vector_sim import (
-    DEMAND_UNIFORM, EXACT, MonteCarloFim, fim_from_counts, resolve_flows,
+    DEMAND_UNIFORM, MonteCarloFim, fim_from_counts, resolve_flows,
     simulate_paths,
 )
 from .vector_throughput import MonteCarloThroughput, throughput_from_result
@@ -213,12 +213,13 @@ def simulate_timeline(
     seeds: Sequence[int] | np.ndarray,
     *,
     fields: str = FIELDS_5TUPLE,
-    hash_backend: str = EXACT,
+    hash_backend: str | None = None,
     strategy=None,
     demand_mode: str = DEMAND_UNIFORM,
     transport=None,
     layers: Sequence[str] | None = None,
     only_used_leaves: bool = False,
+    engine: str = "numpy",
 ) -> TimelineResult:
     """Simulate a phase schedule step by step over one compiled fabric.
 
@@ -226,7 +227,9 @@ def simulate_timeline(
     — that is the fix), through the identical ``simulate_paths`` →
     ``fim_from_counts`` → ``throughput_from_result`` pipeline the merged
     front ends run, under the same ``strategy`` / ``demand_mode`` /
-    ``transport`` contract.  The compiled fabric is shared across steps;
+    ``transport`` / ``engine`` contract (``engine="jax"`` routes every
+    step through the device engine).  The compiled fabric is shared
+    across steps;
     a ``CompiledFabric`` passes through unchanged, so sweeps over
     schedules or strategies pay compilation once.
 
@@ -247,11 +250,11 @@ def simulate_timeline(
             continue
         res = simulate_paths(comp, sub, seeds, fields=fields,
                              hash_backend=hash_backend, strategy=strategy,
-                             demand_mode=demand_mode)
+                             demand_mode=demand_mode, engine=engine)
         agg, per_layer = fim_from_counts(
             res.link_flow_counts(), comp,
             layers=layers, only_used_leaves=only_used_leaves)
-        tp = throughput_from_result(res, transport=transport)
+        tp = throughput_from_result(res, transport=transport, engine=engine)
         steps.append(StepResult(
             step=step, flows=sub,
             fim=MonteCarloFim(seeds=res.seeds, aggregate=agg,

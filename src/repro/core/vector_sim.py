@@ -47,17 +47,45 @@ def resolve_flows(
     workload: WorkloadDescription | Sequence[Flow],
 ) -> list[Flow]:
     """Standard Monte-Carlo front-end contract: a ``WorkloadDescription``
-    is synthesized into flows (NIC count inferred from the compiled
-    fabric's key table); an explicit flow sequence passes through."""
+    is synthesized into flows (NIC plan read from the compiled fabric's
+    recorded ``nic_indices``); an explicit flow sequence passes through.
+
+    Synthesis round-robins over the *recorded* NIC indices, not over
+    ``range(max_index + 1)``: a fabric whose servers expose a sparse NIC
+    numbering (say NICs 0 and 4 on a half-populated host) must never
+    synthesize traffic for NICs that have no links."""
     if isinstance(workload, WorkloadDescription):
         from .fabric import nic_ip
-        nics = max(int(ip.split(".")[1]) for ip in comp.key_of_ip) + 1
-        return synthesize_flows(workload, nic_ip=nic_ip,
-                                nics_per_server=nics)
+        idx = comp.nic_indices
+        return synthesize_flows(
+            workload, nic_ip=lambda srv, k: nic_ip(srv, idx[k]),
+            nics_per_server=len(idx))
     return list(workload)
 
 EXACT = "exact"    # splitmix64 over CRC32 fields == core/ecmp.py bit-for-bit
 MURMUR = "murmur"  # kernels/flowhash murmur3 (TPU bulk_hash path)
+
+ENGINE_NUMPY = "numpy"  # host engine: the differential reference
+ENGINE_JAX = "jax"      # jitted device engine (core/jax_engine.py)
+
+
+def resolve_hash_backend(hash_backend: str | None, engine: str) -> str:
+    """``None`` means "the engine's natural backend": the numpy engine
+    (and jax on CPU, where the differential CI runs) keep the exact
+    tracer-identical splitmix64; the jax engine on a real accelerator
+    defaults to the murmur kernel path (64-bit multiplies are hostile
+    there).  An explicit backend always wins; an unknown one fails here,
+    before any routing work happens."""
+    if hash_backend is not None:
+        if hash_backend not in (EXACT, MURMUR):
+            raise ValueError(
+                f"unknown hash_backend {hash_backend!r}; "
+                f"have {(EXACT, MURMUR)}")
+        return hash_backend
+    if engine == ENGINE_JAX:
+        from .jax_engine import default_hash_backend
+        return default_hash_backend(engine)
+    return EXACT
 
 DEMAND_UNIFORM = "uniform"  # every flow weighs 1 (the PR 1-3 behaviour)
 DEMAND_BYTES = "bytes"      # flows weigh their wire bytes (mean-normalized)
@@ -114,20 +142,22 @@ def ecmp_hash_vec(fields: np.ndarray, seeds: np.ndarray) -> np.ndarray:
 
 
 def _murmur_hash_grid(fields: np.ndarray, dev_seed: np.ndarray) -> np.ndarray:
-    """Per-(flow, seed) murmur3 hash via the flowhash kernel path.
+    """Per-(flow, seed) murmur3 hash grid, seed-as-init convention.
 
-    ``bulk_hash`` takes one scalar seed, so the per-device seed rides as an
-    extra field column; jax is imported lazily to keep the exact backend
-    tracer-light."""
-    from ..kernels.flowhash.ops import bulk_hash
+    The ONE murmur definition, shared across every consumer: the hash
+    starts at the (truncated) device seed and folds the field columns —
+    exactly what the Pallas ``bulk_hash`` kernel computes for a scalar
+    seed and what ``jax_engine``'s device grid computes per cell.  The
+    fold/fmix formulas are imported from the kernel module (they are
+    polymorphic over numpy and jnp arrays), so the numpy backend can
+    never drift from the kernel — and needs no jax round-trip."""
+    from ..kernels.flowhash.kernel import murmur_fmix, murmur_fold
 
-    N, S = dev_seed.shape
-    cols = np.broadcast_to(
-        fields.astype(np.uint32)[:, None, :], (N, S, fields.shape[1]))
-    flat = np.concatenate(
-        [cols, dev_seed.astype(np.uint32)[..., None]], axis=-1
-    ).reshape(N * S, fields.shape[1] + 1)
-    return np.asarray(bulk_hash(flat, 0)).astype(np.uint64).reshape(N, S)
+    h = (dev_seed & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    f32 = fields.astype(np.uint32)
+    for f in range(fields.shape[1]):
+        h = murmur_fold(h, f32[:, f].reshape((-1,) + (1,) * (h.ndim - 1)))
+    return murmur_fmix(h).astype(np.uint64)
 
 
 def hash_grid(field_mat: np.ndarray, dev_seed: np.ndarray,
@@ -300,10 +330,11 @@ def ecmp_walk(
     field_mat: np.ndarray,
     seeds_u64: np.ndarray,
     *,
-    hash_backend: str = EXACT,
+    hash_backend: str | None = None,
     max_hops: int = 16,
     cell_salt: np.ndarray | None = None,
     describe=lambda n: f"column {n}",
+    engine: str = ENGINE_NUMPY,
 ) -> np.ndarray:
     """The raw hop-by-hop hashed walk over explicit endpoint/field arrays.
 
@@ -314,6 +345,12 @@ def ecmp_walk(
     flow-level front end; routing strategies (``core/strategies.py``)
     call this directly with expanded per-flowlet arrays.
 
+    ``engine="jax"`` runs the identical walk as a jitted
+    ``lax.while_loop`` on the accelerator (``core/jax_engine.py``) —
+    bit-identical to the numpy walk backend for backend (the
+    differential contract).  ``hash_backend=None`` resolves to the
+    engine's natural backend (``resolve_hash_backend``).
+
     ``cell_salt`` optionally perturbs the entropy of individual
     ``(column, seed)`` cells: a ``(N, S)`` uint64 array XORed into every
     hop's device seed before hashing.  A zero cell leaves that cell's
@@ -322,6 +359,14 @@ def ecmp_walk(
     re-picking its flowlet's entropy header value, which adaptive
     per-RTT re-spray does per cell under congestion feedback.
     """
+    hash_backend = resolve_hash_backend(hash_backend, engine)
+    if engine != ENGINE_NUMPY:
+        from .jax_engine import jax_ecmp_walk, resolve_engine
+        resolve_engine(engine)
+        return jax_ecmp_walk(
+            comp, src_dev, dst_dev, src_key, dst_key, field_mat, seeds_u64,
+            hash_backend=hash_backend, max_hops=max_hops,
+            cell_salt=cell_salt, describe=describe)
     N, S = len(src_dev), len(seeds_u64)
     state = np.broadcast_to(src_dev[:, None], (N, S)).copy()   # (N, S)
     done = np.zeros((N, S), bool)
@@ -365,11 +410,12 @@ def simulate_paths(
     seeds: Sequence[int] | np.ndarray,
     *,
     fields: str = FIELDS_5TUPLE,
-    hash_backend: str = EXACT,
+    hash_backend: str | None = None,
     max_hops: int = 16,
     field_matrix: np.ndarray | None = None,
     strategy=None,
     demand_mode: str = DEMAND_UNIFORM,
+    engine: str = ENGINE_NUMPY,
 ) -> VectorTraceResult:
     """Walk every flow through the fabric under every seed, vectorized.
 
@@ -379,6 +425,12 @@ def simulate_paths(
     or a ``RoutingStrategy`` instance, and routes the whole simulation
     through its vectorized implementation instead (the result may carry
     flowlet columns — see ``VectorTraceResult``).
+
+    ``engine`` selects the walk implementation: ``"numpy"`` (host, the
+    differential reference) or ``"jax"`` (jitted device walk, identical
+    results — bit-identical under ``hash_backend="exact"``).  Strategies
+    receive the engine the same guarded way ``demand_mode`` travels, so
+    pre-engine custom strategies keep working on the default.
 
     ``demand_mode`` selects the flow demand model: ``"uniform"`` (every
     flow weighs 1) or ``"bytes"`` (flows weigh their ``Flow.bytes``, see
@@ -393,17 +445,20 @@ def simulate_paths(
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     flows = list(flows)
     seeds_u64 = normalize_seeds(seeds)
+    hash_backend = resolve_hash_backend(hash_backend, engine)
     if len(flows) == 0:
         raise ValueError("simulate_paths needs at least one flow")
     if strategy is not None:
         from .strategies import resolve_strategy
-        # demand_mode is only forwarded when it actually asks for
-        # something: custom strategies registered against the pre-demand
-        # route() signature keep working under the default uniform model,
-        # and a non-uniform request against one fails loudly (TypeError)
-        # instead of silently dropping the weights
+        # demand_mode / engine are only forwarded when they actually ask
+        # for something: custom strategies registered against the older
+        # route() signatures keep working under the defaults, and a
+        # non-default request against one fails loudly (TypeError)
+        # instead of silently dropping the ask
         extra = ({} if demand_mode == DEMAND_UNIFORM
                  else {"demand_mode": demand_mode})
+        if engine != ENGINE_NUMPY:
+            extra["engine"] = engine
         return resolve_strategy(strategy).route(
             comp, flows, seeds_u64, fields=fields, hash_backend=hash_backend,
             max_hops=max_hops, field_matrix=field_matrix, **extra)
@@ -414,7 +469,7 @@ def simulate_paths(
     link_ids = ecmp_walk(
         comp, src_dev, dst_dev, src_key, dst_key, field_mat, seeds_u64,
         hash_backend=hash_backend, max_hops=max_hops,
-        describe=lambda n: f"flow {flows[n].flow_id}")
+        describe=lambda n: f"flow {flows[n].flow_id}", engine=engine)
     return VectorTraceResult(
         compiled=comp, flows=flows, seeds=seeds_u64, link_ids=link_ids,
         flow_demand=flow_demand)
@@ -530,11 +585,12 @@ def monte_carlo_fim(
     seeds: Sequence[int] | np.ndarray,
     *,
     fields: str = FIELDS_5TUPLE,
-    hash_backend: str = EXACT,
+    hash_backend: str | None = None,
     layers: Sequence[str] | None = None,
     only_used_leaves: bool = False,
     strategy=None,
     demand_mode: str = DEMAND_UNIFORM,
+    engine: str = ENGINE_NUMPY,
 ) -> MonteCarloFim:
     """FIM distribution of a routing strategy across a hash-seed sweep.
 
@@ -543,13 +599,36 @@ def monte_carlo_fim(
     flow list.  ``strategy`` and ``demand_mode`` follow the
     ``simulate_paths`` contract (default: per-flow ECMP, unit demand;
     ``demand_mode="bytes"`` makes the FIM byte-weighted).
+
+    ``engine="jax"`` with plain ECMP takes the fused device pipeline
+    (walk + counts + FIM in one pass, ``jax_engine``); other strategies
+    route on the jax walk and aggregate on host.
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
+    if engine != ENGINE_NUMPY and _is_plain_ecmp(strategy):
+        from .jax_engine import fused_monte_carlo_fim, resolve_engine
+        resolve_engine(engine)
+        return fused_monte_carlo_fim(
+            comp, workload, seeds, fields=fields,
+            hash_backend=resolve_hash_backend(hash_backend, engine),
+            layers=layers, only_used_leaves=only_used_leaves,
+            demand_mode=demand_mode)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
                          hash_backend=hash_backend, strategy=strategy,
-                         demand_mode=demand_mode)
+                         demand_mode=demand_mode, engine=engine)
     agg, per_layer = fim_from_counts(
         res.link_flow_counts(), comp,
         layers=layers, only_used_leaves=only_used_leaves)
     return MonteCarloFim(seeds=res.seeds, aggregate=agg, per_layer=per_layer)
+
+
+def _is_plain_ecmp(strategy) -> bool:
+    """True when ``strategy`` requests the default per-flow ECMP walk —
+    the shape the fused device pipeline implements.  Configured or custom
+    strategies (including subclasses of ``EcmpStrategy``) route through
+    their own ``route`` with the device walk underneath instead."""
+    if strategy is None or strategy == "ecmp":
+        return True
+    from .strategies import EcmpStrategy
+    return type(strategy) is EcmpStrategy

@@ -47,8 +47,8 @@ from .ecmp import FIELDS_5TUPLE
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription
 from .vector_sim import (
-    DEMAND_UNIFORM, EXACT, VectorTraceResult, resolve_flows, segment_reduce,
-    simulate_paths,
+    DEMAND_UNIFORM, ENGINE_NUMPY, VectorTraceResult, _is_plain_ecmp,
+    resolve_flows, resolve_hash_backend, segment_reduce, simulate_paths,
 )
 
 # Seeds per cache block: per-cell state is ~5 arrays of seed_block * L
@@ -248,8 +248,14 @@ def batched_max_min(
     assume_unique: bool = False,
     seed_block: int = DEFAULT_SEED_BLOCK,
     weights: np.ndarray | None = None,
+    engine: str = ENGINE_NUMPY,
 ) -> np.ndarray:
     """Max-min fair rates (Gb/s) for an ``(H, N, S)`` link-id tensor.
+
+    ``engine="jax"`` runs the same parallel local-bottleneck fill as a
+    jitted ``lax.while_loop`` on the accelerator
+    (``jax_engine.jax_batched_max_min``; results agree to float-epsilon
+    freeze-order drift, differential-tested at 1e-6).
 
     ``link_ids[h, n, s]`` is the id of the h-th link flow ``n`` crosses
     under seed ``s`` (-1 past the end of the path); ``link_gbps`` maps
@@ -267,6 +273,12 @@ def batched_max_min(
     loop-free by construction.  ``seed_block`` tunes the cache-residency
     granularity and never changes results.
     """
+    if engine != ENGINE_NUMPY:
+        from .jax_engine import jax_batched_max_min, resolve_engine
+        resolve_engine(engine)
+        return jax_batched_max_min(link_ids, link_gbps,
+                                   assume_unique=assume_unique,
+                                   weights=weights)
     link_ids = np.asarray(link_ids)
     if link_ids.ndim != 3:
         raise ValueError(f"link_ids must be (H, N, S), got {link_ids.shape}")
@@ -330,7 +342,8 @@ def batched_max_min(
     return rates.T                         # (N, S) transposed view
 
 
-def max_min_rates(result: VectorTraceResult) -> np.ndarray:
+def max_min_rates(result: VectorTraceResult,
+                  engine: str = ENGINE_NUMPY) -> np.ndarray:
     """``(Nf, S)`` max-min rates for every tensor column (flowlet) under
     every traced seed.  Single-path unit-demand results: one column per
     flow, the PR-2 behaviour exactly.  Otherwise every column carries
@@ -344,7 +357,7 @@ def max_min_rates(result: VectorTraceResult) -> np.ndarray:
     if (w == 1.0).all():
         w = None
     return batched_max_min(result.link_ids, result.compiled.link_gbps,
-                           assume_unique=True, weights=w)
+                           assume_unique=True, weights=w, engine=engine)
 
 
 def flow_rates_from_flowlets(result: VectorTraceResult,
@@ -454,6 +467,7 @@ def throughput_from_result(
     *,
     transport=None,
     flowlet_rates: np.ndarray | None = None,
+    engine: str = ENGINE_NUMPY,
 ) -> MonteCarloThroughput:
     """Rate distributions for an already-simulated ``VectorTraceResult``
     (lets callers share one ``simulate_paths`` pass between FIM and
@@ -482,13 +496,17 @@ def throughput_from_result(
     ``flowlet_rates`` optionally supplies a precomputed
     ``max_min_rates(result)`` tensor so callers evaluating the same
     routed result under several transports run the progressive fill —
-    the dominant cost — once."""
+    the dominant cost — once.
+
+    ``engine="jax"`` runs the fill and the exposure segment reductions
+    on the device engine (``jax_engine``); the pair aggregation and the
+    efficiency map are output-sized and stay host-side."""
     from .reordering import (
         flowlet_exposure, reordering_efficiency, resolve_transport,
     )
     profile = resolve_transport(transport)
     if flowlet_rates is None:
-        flowlet_rates = max_min_rates(result)
+        flowlet_rates = max_min_rates(result, engine=engine)
     rates = flow_rates_from_flowlets(result, flowlet_rates)
     pairs, per_pair = pair_rate_matrix(result.flows, rates)
     if profile.alpha == 0.0 or profile.floor == 1.0:
@@ -496,7 +514,7 @@ def throughput_from_result(
                                     rates=rates, pairs=pairs,
                                     per_pair=per_pair,
                                     transport=profile.name)
-    exposure = flowlet_exposure(result, flowlet_rates)
+    exposure = flowlet_exposure(result, flowlet_rates, engine=engine)
     efficiency = reordering_efficiency(exposure, profile)
     return MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
                                 rates=rates, pairs=pairs, per_pair=per_pair,
@@ -511,11 +529,12 @@ def monte_carlo_throughput(
     seeds: Sequence[int] | np.ndarray,
     *,
     fields: str = FIELDS_5TUPLE,
-    hash_backend: str = EXACT,
+    hash_backend: str | None = None,
     field_matrix: np.ndarray | None = None,
     strategy=None,
     demand_mode: str = DEMAND_UNIFORM,
     transport=None,
+    engine: str = ENGINE_NUMPY,
 ) -> MonteCarloThroughput:
     """Max-min throughput distribution of a routing strategy across a
     seed sweep.
@@ -528,10 +547,24 @@ def monte_carlo_throughput(
     ``demand_mode="bytes"`` allocates weighted max-min shares);
     ``transport`` the ``throughput_from_result`` contract (reordering
     cost model for ``goodput``; default ``"ideal"`` = reordering-free).
+
+    ``engine="jax"`` with plain ECMP takes the fused device pipeline
+    (walk + fill in one device-resident pass, ``jax_engine``); other
+    strategies route on the jax walk and fill/expose on device with
+    host glue in between.
     """
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
+    if engine != ENGINE_NUMPY and _is_plain_ecmp(strategy):
+        from .jax_engine import fused_monte_carlo_throughput, resolve_engine
+        resolve_engine(engine)
+        return fused_monte_carlo_throughput(
+            comp, workload, seeds, fields=fields,
+            hash_backend=resolve_hash_backend(hash_backend, engine),
+            demand_mode=demand_mode, transport=transport,
+            field_matrix=field_matrix)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, fields=fields,
                          hash_backend=hash_backend, field_matrix=field_matrix,
-                         strategy=strategy, demand_mode=demand_mode)
-    return throughput_from_result(res, transport=transport)
+                         strategy=strategy, demand_mode=demand_mode,
+                         engine=engine)
+    return throughput_from_result(res, transport=transport, engine=engine)

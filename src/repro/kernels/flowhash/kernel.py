@@ -60,6 +60,13 @@ def _hash_kernel(fields_ref, seed_ref, out_ref, *, n_fields: int):
     out_ref[...] = murmur_fmix(h)
 
 
+def _hash_kernel_seeded(fields_ref, seeds_ref, out_ref, *, n_fields: int):
+    h = seeds_ref[...]                    # (block, 1) per-row hash init
+    for f in range(n_fields):
+        h = murmur_fold(h, fields_ref[:, f : f + 1])
+    out_ref[...] = murmur_fmix(h)
+
+
 def bulk_hash_kernel(fields: jax.Array, seed: jax.Array, *,
                      block: int = 4096, interpret: bool = False) -> jax.Array:
     """fields: (N, F) uint32; seed: () uint32 -> (N, 1) uint32 hashes.
@@ -78,3 +85,27 @@ def bulk_hash_kernel(fields: jax.Array, seed: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((N, 1), jnp.uint32),
         interpret=interpret,
     )(fields, seed.reshape(1, 1))
+
+
+def bulk_hash_seeded_kernel(fields: jax.Array, seeds: jax.Array, *,
+                            block: int = 4096,
+                            interpret: bool = False) -> jax.Array:
+    """fields: (N, F) uint32; seeds: (N, 1) uint32 per-row hash init ->
+    (N, 1) uint32 hashes — the seed-as-init murmur convention shared with
+    the engines' hash grids.  A broadcast ``seeds`` row reproduces
+    ``bulk_hash_kernel`` exactly (same fold/fmix chain, the scalar SMEM
+    seed is just the degenerate per-row case)."""
+    N, F = fields.shape
+    assert N % block == 0, (N, block)
+    kernel = functools.partial(_hash_kernel_seeded, n_fields=F)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block,),
+        in_specs=[
+            pl.BlockSpec((block, F), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.uint32),
+        interpret=interpret,
+    )(fields, seeds)

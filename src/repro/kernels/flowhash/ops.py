@@ -9,8 +9,13 @@ evaluated as four fused hash passes instead of per-flow SSH queries.
 
 ``simulate_paper_paths`` is hard-wired to the 4-stage paper testbed; for
 arbitrary fabrics (and bit-identical parity with ``EcmpRouting``) use
-``repro.core.vector_sim``, which can route its per-hop hashing through
-``bulk_hash`` here via ``hash_backend="murmur"``.
+``repro.core.vector_sim`` / ``repro.core.jax_engine``, whose
+``hash_backend="murmur"`` evaluates the SAME hash as ``bulk_hash`` here:
+one murmur definition — seed-as-init, fold the field columns, fmix
+(``kernel.murmur_fold``/``murmur_fmix``) — shared by the Pallas kernel,
+the jnp oracle, the numpy engine grid, and the jitted device grid.
+``tests/test_kernels.py`` pins the per-stage choice distribution so the
+unification can never drift the paper-testbed statistics.
 """
 
 from __future__ import annotations
@@ -21,8 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import bulk_hash_kernel
-from .ref import bulk_hash_ref
+from .kernel import bulk_hash_kernel, bulk_hash_seeded_kernel
+from .ref import bulk_hash_ref, bulk_hash_seeded_ref
 
 
 def _on_tpu() -> bool:
@@ -31,7 +36,13 @@ def _on_tpu() -> bool:
 
 def bulk_hash(fields, seed, *, force_kernel: bool = False,
               interpret: bool = False, block: int = 4096):
-    """fields: (N, F) uint32 -> (N,) uint32.  seed: any int (wrapped u32)."""
+    """fields: (N, F) uint32 -> (N,) uint32.  seed: any int (wrapped u32).
+
+    The seed-as-init murmur convention: the hash starts at ``seed`` and
+    folds the field columns — the same definition the engines' murmur
+    grids (``vector_sim._murmur_hash_grid``, ``jax_engine``) evaluate
+    per (flow, seed) cell, and ``bulk_hash_seeded`` evaluates per row.
+    """
     seed = np.uint32(int(seed) & 0xFFFFFFFF)
     return _bulk_hash_impl(fields, seed, force_kernel=force_kernel,
                            interpret=interpret, block=block)
@@ -49,6 +60,35 @@ def _bulk_hash_impl(fields, seed, *, force_kernel: bool = False,
                                block=block, interpret=interpret or not _on_tpu())
     else:
         out = bulk_hash_ref(fields, jnp.uint32(seed))
+    return out[:N, 0]
+
+
+def bulk_hash_seeded(fields, seeds, *, force_kernel: bool = False,
+                     interpret: bool = False, block: int = 4096):
+    """fields: (N, F) uint32, seeds: (N,) uint32 per-row hash init ->
+    (N,) uint32.  The per-row-seed twin of ``bulk_hash`` (same fold/fmix
+    chain); ``bulk_hash(fields, s) == bulk_hash_seeded(fields, full(N, s))``
+    bit-for-bit, which is what pins all murmur consumers to one
+    definition."""
+    return _bulk_hash_seeded_impl(
+        fields, seeds, force_kernel=force_kernel, interpret=interpret,
+        block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("force_kernel", "interpret", "block"))
+def _bulk_hash_seeded_impl(fields, seeds, *, force_kernel: bool = False,
+                           interpret: bool = False, block: int = 4096):
+    N, F = fields.shape
+    pad = (-N) % block
+    if pad:
+        fields = jnp.pad(fields, ((0, pad), (0, 0)))
+        seeds = jnp.pad(seeds, ((0, pad),))
+    seeds = seeds.astype(jnp.uint32).reshape(-1, 1)
+    if force_kernel or _on_tpu():
+        out = bulk_hash_seeded_kernel(
+            fields, seeds, block=block, interpret=interpret or not _on_tpu())
+    else:
+        out = bulk_hash_seeded_ref(fields, seeds)
     return out[:N, 0]
 
 

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the bulk murmur3 hash kernel."""
+"""Pure-jnp oracle for the bulk murmur3 hash kernels."""
 
 from __future__ import annotations
 
@@ -7,10 +7,19 @@ import jax.numpy as jnp
 from .kernel import murmur_fmix, murmur_fold
 
 
-def bulk_hash_ref(fields, seed):
-    """fields: (N, F) uint32; seed: () uint32 -> (N, 1) uint32."""
+def bulk_hash_seeded_ref(fields, seeds):
+    """fields: (N, F) uint32; seeds: (N, 1) uint32 per-row init ->
+    (N, 1) uint32 — the one murmur definition (seed-as-init, fold the
+    field columns, fmix) every backend shares."""
     N, F = fields.shape
-    h = jnp.full((N, 1), seed, jnp.uint32)
+    h = seeds
     for f in range(F):
         h = murmur_fold(h, fields[:, f : f + 1])
     return murmur_fmix(h)
+
+
+def bulk_hash_ref(fields, seed):
+    """fields: (N, F) uint32; seed: () uint32 -> (N, 1) uint32 — the
+    scalar-seed entry, a broadcast row of the seeded oracle."""
+    N, _ = fields.shape
+    return bulk_hash_seeded_ref(fields, jnp.full((N, 1), seed, jnp.uint32))

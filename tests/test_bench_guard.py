@@ -16,13 +16,16 @@ def _payload(rows, override=None):
     return {"schema": 1, "bench_seeds_override": override, "rows": rows}
 
 
-def _row(name, us, seeds=None, flows=None):
+def _row(name, us, seeds=None, flows=None, engine=None):
     metrics = {}
     if seeds is not None:
         metrics["seeds"] = seeds
     if flows is not None:
         metrics["flows"] = flows
-    return {"name": name, "us_per_call": us, "derived": "", "metrics": metrics}
+    row = {"name": name, "us_per_call": us, "derived": "", "metrics": metrics}
+    if engine is not None:
+        row["engine"] = engine
+    return row
 
 
 def test_fires_on_slowdown_beyond_threshold():
@@ -94,7 +97,33 @@ def test_new_rows_pass_without_baseline():
 def test_shape_key_fields():
     payload = _payload([], override="8")
     row = _row("x", 1.0, seeds=8, flows=256)
-    assert shape_key(payload, row) == ("x", "8", 8, 256)
+    assert shape_key(payload, row) == ("x", "8", 8, 256, None)
+    row = _row("x", 1.0, seeds=8, flows=256, engine="jax")
+    assert shape_key(payload, row) == ("x", "8", 8, 256, "jax")
+
+
+def test_engine_mismatch_is_orphaned_not_compared():
+    """A backend-only difference (same name, same shape) must never
+    compare — a numpy->jax swap would otherwise read as a perf
+    regression — and the stranded baseline row must surface as
+    ORPHANED rather than silently guarding nothing."""
+    old = _payload([_row("engine_fill", 100.0, seeds=1024, engine="numpy")])
+    new = _payload([_row("engine_fill", 900.0, seeds=1024, engine="jax")])
+    regressions, compared = compare(old, new)
+    assert (regressions, compared) == ([], 0)
+    orphans = orphaned_rows(old, new)
+    assert len(orphans) == 1
+    assert orphans[0][0] == "engine_fill"
+    assert orphans[0][-1] == "numpy"
+
+
+def test_same_engine_same_shape_compares():
+    old = _payload([_row("engine_fill", 100.0, seeds=1024, engine="jax")])
+    new = _payload([_row("engine_fill", 900.0, seeds=1024, engine="jax")])
+    regressions, compared = compare(old, new)
+    assert compared == 1
+    assert len(regressions) == 1
+    assert "engine=jax" in regressions[0]
 
 
 def test_main_red_and_green(tmp_path, monkeypatch):
@@ -230,9 +259,9 @@ def test_shape_key_prefers_row_level_override():
     payload = _payload([], override="8")
     carried = _row("x", 1.0, seeds=8, flows=256)
     carried["bench_seeds_override"] = None      # measured at full shape
-    assert shape_key(payload, carried) == ("x", None, 8, 256)
+    assert shape_key(payload, carried) == ("x", None, 8, 256, None)
     fresh = _row("x", 1.0, seeds=8, flows=256)  # pre-stamp fallback
-    assert shape_key(payload, fresh) == ("x", "8", 8, 256)
+    assert shape_key(payload, fresh) == ("x", "8", 8, 256, None)
 
 
 def test_subset_run_carries_prior_errors(tmp_path, monkeypatch):

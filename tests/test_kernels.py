@@ -9,7 +9,9 @@ from _propcheck import given, settings, strategies as st
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.flowhash.ops import bulk_hash, link_loads_fim, simulate_paper_paths
+from repro.kernels.flowhash.ops import (
+    bulk_hash, bulk_hash_seeded, link_loads_fim, simulate_paper_paths,
+)
 from repro.kernels.ssd.ops import ssd_scan
 from repro.models.ssm import ssd_chunked
 
@@ -96,3 +98,42 @@ def test_flowhash_uniformity():
     _, fim_small = link_loads_fim(ch["uplink"][:256], 16)
     assert fim_large < 2.0       # ~uniform at 200k flows
     assert fim_small > 5.0       # visibly imbalanced at paper scale
+
+
+def test_flowhash_seeded_kernel_equals_ref():
+    fields = jax.random.randint(KEY, (5000, 5), 0, 2**31 - 1).astype(jnp.uint32)
+    seeds = jax.random.randint(jax.random.fold_in(KEY, 9), (5000,),
+                               0, 2**31 - 1).astype(jnp.uint32)
+    hk = bulk_hash_seeded(fields, seeds, force_kernel=True, interpret=True)
+    hr = bulk_hash_seeded(fields, seeds)
+    assert (hk == hr).all()
+    # a broadcast seed row degenerates to the scalar-seed entry point:
+    # the seed-as-init convention is ONE definition, not two
+    full = jnp.full((5000,), 7, jnp.uint32)
+    assert (bulk_hash_seeded(fields, full) == bulk_hash(fields, 7)).all()
+
+
+def test_flowhash_choice_distribution_pinned():
+    """Hard-coded pre-unification values of ``simulate_paper_paths`` /
+    ``bulk_hash``: the one-murmur-definition refactor (seed-as-init,
+    shared with the engines' hash grids) must never drift the
+    paper-testbed choice statistics by a single flow."""
+    rng = np.random.default_rng(42)
+    fields = jnp.asarray(rng.integers(0, 2**31, (4096, 5)), jnp.uint32)
+    ch = simulate_paper_paths(fields)
+    want = {
+        "src_port": ([1, 1, 0, 1, 1, 0, 1, 0], 1958, [2138, 1958]),
+        "uplink": ([14, 12, 13, 9, 2, 8, 1, 8], 30992,
+                   [245, 268, 264, 235, 244, 247, 276, 258]),
+        "spine_link": ([0, 1, 0, 3, 1, 0, 1, 1], 6196,
+                       [1028, 992, 1024, 1052]),
+        "dst_port": ([1, 1, 1, 1, 0, 1, 0, 1], 2086, [2010, 2086]),
+    }
+    for stage, (first8, total, counts) in want.items():
+        got = np.asarray(ch[stage])
+        assert got[:8].tolist() == first8, stage
+        assert int(got.sum()) == total, stage
+        assert np.bincount(got)[: len(counts)].tolist() == counts, stage
+    h = np.asarray(bulk_hash(fields, 12345), np.uint64)
+    assert h[:4].tolist() == [1282828036, 453300701, 462728589, 1920719609]
+    assert int(h.sum()) == 8712584361707

@@ -182,3 +182,36 @@ def test_unknown_backend_raises(paper_compiled, paper_setup):
     _, _, flows = paper_setup
     with pytest.raises(ValueError):
         simulate_paths(paper_compiled, flows[:4], [0], hash_backend="xxh3")
+
+
+def test_sparse_nic_numbering_resolves_flows():
+    """A fabric whose servers expose non-contiguous NIC indices (here 0
+    and 4, as on a half-populated host) must synthesize workload traffic
+    on exactly the recorded NICs — inferring ``range(max + 1)`` would
+    invent link-less NICs 1-3 and either crash the walk or route ghost
+    traffic."""
+    import dataclasses as _dc
+
+    from repro.core import monte_carlo_fim, resolve_flows
+    from repro.core.fabric import build_paper_testbed as _build
+
+    fab = _build()
+    links = [
+        _dc.replace(ln,
+                    src_port=ln.src_port.replace("nic1p", "nic4p"),
+                    dst_port=ln.dst_port.replace("nic1p", "nic4p"))
+        for ln in fab.links
+    ]
+    from repro.core.fabric import Fabric
+    sparse = Fabric(list(fab.devices.values()), links)
+    comp = compile_fabric(sparse)
+    assert comp.nic_indices == (0, 4)
+
+    rack0 = [server_name(i) for i in range(8)]
+    rack1 = [server_name(8 + i) for i in range(8)]
+    wl = bipartite_pairs(rack0, rack1, flows_per_pair=4)
+    flows = resolve_flows(comp, wl)
+    used = {int(f.tuple5.src_ip.split(".")[1]) for f in flows}
+    assert used == {0, 4}
+    mc = monte_carlo_fim(comp, wl, [0, 1, 2])
+    assert mc.aggregate.shape == (3,)
