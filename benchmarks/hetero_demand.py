@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.core import (
     DEMAND_BYTES, DEMAND_UNIFORM, ELEPHANT_MIN_BYTES, FIELDS_5TUPLE,
-    CongestionAware, EcmpStrategy, PrimeSpraying, build_multipod_fabric,
+    CongestionAware, EcmpStrategy, PrimeSpraying, WaveCongestionAware,
+    build_multipod_fabric,
     build_paper_testbed, compile_fabric, fim_from_counts, flow_fields_matrix,
     multipod_llm_workload, paper_testbed_llm_workload, simulate_paths,
     throughput_from_result,
@@ -55,6 +56,11 @@ STRATEGY_MATRIX = [
      lambda: PrimeSpraying(flowlets=8, min_bytes=ELEPHANT_MIN_BYTES,
                            volume_k=True)),
     ("congestion", CongestionAware),
+    # byte-weighted LLM volumes are heterogeneous, so the wave variant
+    # delegates to the sequential chain here — these rows document the
+    # delegation parity (identical FIM to "congestion") rather than a
+    # wave-path speedup; benchmarks/wave_route.py times the wave proper
+    ("wave_congestion", WaveCongestionAware),
 ]
 
 

@@ -24,7 +24,7 @@ from . import (
     bulk_scale, fig3a_routing_comparison, fig3bc_flow_distributions,
     fig4_thread_scaling, fig5_connection_strategies, goodput, hetero_demand,
     jax_engine, monte_carlo_fim, placement_ablation, roofline,
-    throughput_sweep, timeline, vxlan_entropy,
+    throughput_sweep, timeline, vxlan_entropy, wave_route,
 )
 from .common import RESULTS
 
@@ -40,6 +40,7 @@ BENCHES = {
     "throughput": throughput_sweep.run,
     "timeline": timeline.run,
     "jax_engine": jax_engine.run,
+    "wave_route": wave_route.run,
     "placement": placement_ablation.run,
     "vxlan": vxlan_entropy.run,
     "roofline": roofline.run,

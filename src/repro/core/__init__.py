@@ -24,8 +24,8 @@ from .ecmp import (
 )
 from .compile_fabric import CompiledFabric, compile_fabric
 from .vector_sim import (
-    VectorTraceResult, MonteCarloFim, simulate_paths, fim_from_counts,
-    fim_vector, monte_carlo_fim, resolve_flows,
+    VectorTraceResult, MonteCarloFim, SimSpec, simulate_paths,
+    fim_from_counts, fim_vector, monte_carlo_fim, resolve_flows,
     DEMAND_UNIFORM, DEMAND_BYTES, flow_demand_weights,
     ENGINE_NUMPY, ENGINE_JAX, resolve_hash_backend,
 )
@@ -36,7 +36,7 @@ from .vector_throughput import (
 )
 from .strategies import (
     RoutingStrategy, EcmpStrategy, PrimeSpraying, AdaptiveSpraying,
-    CongestionAware,
+    CongestionAware, WaveCongestionAware,
     register_strategy, resolve_strategy, available_strategies,
     ELEPHANT_MIN_BYTES,
 )
@@ -86,15 +86,15 @@ __all__ = [
     "device_seed", "flow_hash_fields", "flow_fields_matrix",
     "FIELDS_5TUPLE", "FIELDS_VXLAN", "FIELDS_IP_PAIR",
     "CompiledFabric", "compile_fabric",
-    "VectorTraceResult", "MonteCarloFim", "simulate_paths", "fim_from_counts",
-    "fim_vector", "monte_carlo_fim", "resolve_flows",
+    "VectorTraceResult", "MonteCarloFim", "SimSpec", "simulate_paths",
+    "fim_from_counts", "fim_vector", "monte_carlo_fim", "resolve_flows",
     "DEMAND_UNIFORM", "DEMAND_BYTES", "flow_demand_weights",
     "ENGINE_NUMPY", "ENGINE_JAX", "resolve_hash_backend",
     "MonteCarloThroughput", "batched_max_min", "max_min_rates",
     "flow_rates_from_flowlets", "pair_rate_matrix", "throughput_from_result",
     "monte_carlo_throughput",
     "RoutingStrategy", "EcmpStrategy", "PrimeSpraying", "AdaptiveSpraying",
-    "CongestionAware",
+    "CongestionAware", "WaveCongestionAware",
     "register_strategy", "resolve_strategy", "available_strategies",
     "ELEPHANT_MIN_BYTES",
     "TransportProfile", "IDEAL", "ROCE_NACK", "STRACK",

@@ -52,7 +52,8 @@ from .vector_sim import (
 
 __all__ = [
     "ENGINE_NUMPY", "ENGINE_JAX", "default_hash_backend",
-    "jax_ecmp_walk", "jax_link_flow_counts", "jax_fim_from_counts",
+    "jax_ecmp_walk", "jax_wave_walk", "jax_link_flow_counts",
+    "jax_fim_from_counts",
     "jax_batched_max_min", "jax_flowlet_exposure",
     "fused_monte_carlo_fim", "fused_monte_carlo_throughput",
 ]
@@ -294,6 +295,122 @@ def jax_ecmp_walk(
                 f"some flows did not terminate in {max_hops} hops")
         _check_walk(comp, state, dst_dev, describe)
         return np.asarray(ids[:hops])
+
+
+def _wave_walk_jit():
+    jax, jnp, lax = _jx()
+
+    @functools.partial(
+        jax.jit, static_argnames=("max_hops", "hash_backend", "n_fields",
+                                  "cool", "near"))
+    def wave_walk(cand, cand_n, dev_crc, is_server, link_dst,
+                  src_dev, src_key, dst_key, fields, seeds, loads_q,
+                  *, max_hops: int, hash_backend: str, n_fields: int,
+                  cool: bool, near: bool):
+        N, S = src_dev.shape[0], seeds.shape[0]
+        C = cand.shape[-1]
+        flat = loads_q.reshape(-1)
+        row_off = jnp.arange(S, dtype=jnp.int64) * loads_q.shape[1]
+        col_idx = jnp.arange(C)
+        state0 = jnp.broadcast_to(
+            src_dev[:, None].astype(jnp.int32), (N, S))
+        done0 = jnp.zeros((N, S), bool)
+        ids0 = jnp.full((max_hops, N, S), -1, jnp.int32)
+
+        def cond(c):
+            t, state, done, ids = c
+            return (t < max_hops) & ~done.all()
+
+        def body(c):
+            t, state, done, ids = c
+            key = jnp.where(is_server[state], src_key[:, None],
+                            dst_key[:, None])
+            n = cand_n[state, key]
+            cands = cand[state, key]                       # (N, S, C)
+            valid = (col_idx < n[..., None]) & (cands >= 0)
+            cl = jnp.where(
+                valid,
+                flat[row_off[None, :, None] + jnp.maximum(cands, 0)],
+                jnp.inf)
+            dev_seed = dev_crc[state] ^ seeds[None, :]
+            h = _hash_grid_j(fields, dev_seed, hash_backend)
+            # the three _wave_choice eligibility modes, selected
+            # statically (cool/near are jit-static):
+            if cool and near:
+                m = cl.min(axis=-1)
+                tie = valid & (cl <= m[..., None] + 1.0)
+            elif cool:
+                n_valid = jnp.maximum(valid.sum(axis=-1), 1)
+                mean = jnp.where(valid, cl, 0.0).sum(axis=-1) / n_valid
+                tie = valid & (cl <= jnp.floor(mean)[..., None])
+            else:
+                tie = valid & (cl == cl.min(axis=-1)[..., None])
+            n_tie = tie.sum(axis=-1)
+            rank = jnp.where(
+                n_tie > 1,
+                (h % jnp.maximum(n_tie, 1).astype(jnp.uint64)
+                 ).astype(jnp.int64),
+                0)
+            col = (tie.cumsum(axis=-1) <= rank[..., None]).sum(axis=-1)
+            link = jnp.take_along_axis(
+                cands, jnp.minimum(col, C - 1)[..., None], axis=-1)[..., 0]
+            link = jnp.where(done | (n == 0), -1, link)
+            ids = lax.dynamic_update_index_in_dim(ids, link, t, 0)
+            nxt = jnp.where(link >= 0, link_dst[jnp.maximum(link, 0)], state)
+            done = done | (link < 0) | is_server[nxt]
+            return t + 1, nxt, done, ids
+
+        t, state, done, ids = lax.while_loop(
+            cond, body, (jnp.int32(0), state0, done0, ids0))
+        return ids, state, done, t
+
+    return wave_walk
+
+
+@functools.lru_cache(maxsize=1)
+def _wave_walk_fn():
+    return _wave_walk_jit()
+
+
+def jax_wave_walk(
+    comp: CompiledFabric,
+    src_dev: np.ndarray,
+    dst_dev: np.ndarray,
+    src_key: np.ndarray,
+    dst_key: np.ndarray,
+    field_mat: np.ndarray,
+    seeds_u64: np.ndarray,
+    loads: np.ndarray,
+    *,
+    hash_backend: str = EXACT,
+    max_hops: int = 16,
+    quantum: float = 1.0,
+    cool: bool = False,
+    near: bool = False,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Device twin of ``strategies._wave_walk_numpy``: one speculative
+    wave-routing pass of every (flow, seed) cell against a *frozen*
+    ``(S, L)`` load snapshot, decisions quantized to ``quantum`` and
+    tie-broken with the documented ``hash % n_tie`` rule — bit-identical
+    to the numpy wave walk under ``hash_backend="exact"`` (the
+    cross-engine differential contract).  ``cool``/``near`` select the
+    repair-arrival eligibility modes of ``_wave_choice``; they are
+    jit-static, so each mode compiles once.  Returns host-side
+    ``(ids[:hops], state, done)`` for the caller's arrival checks."""
+    with _x64():
+        _, jnp, _ = _jx()
+        tabs = device_tables(comp)
+        loads_q = jnp.asarray(np.floor(np.asarray(loads) / quantum))
+        ids, state, done, t = _wave_walk_fn()(
+            tabs.cand, tabs.cand_n, tabs.dev_crc, tabs.is_server,
+            tabs.link_dst, jnp.asarray(src_dev), jnp.asarray(src_key),
+            jnp.asarray(dst_key), jnp.asarray(field_mat),
+            jnp.asarray(seeds_u64), loads_q,
+            max_hops=max_hops, hash_backend=hash_backend,
+            n_fields=int(field_mat.shape[1]),
+            cool=bool(cool), near=bool(near))
+        hops = int(t)
+        return np.asarray(ids[:hops]), np.asarray(state), np.asarray(done)
 
 
 # ---------------------------------------------------------------------------

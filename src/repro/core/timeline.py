@@ -54,12 +54,11 @@ from collections.abc import Sequence
 import numpy as np
 
 from .compile_fabric import CompiledFabric, compile_fabric
-from .ecmp import FIELDS_5TUPLE
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription
 from .vector_sim import (
-    DEMAND_UNIFORM, MonteCarloFim, fim_from_counts, resolve_flows,
-    simulate_paths,
+    MonteCarloFim, SimSpec, _UNSET, fim_from_counts,
+    resolve_flows, resolve_spec, simulate_paths,
 )
 from .vector_throughput import MonteCarloThroughput, throughput_from_result
 
@@ -212,24 +211,27 @@ def simulate_timeline(
     schedule: Sequence[TimelineStep],
     seeds: Sequence[int] | np.ndarray,
     *,
-    fields: str = FIELDS_5TUPLE,
-    hash_backend: str | None = None,
-    strategy=None,
-    demand_mode: str = DEMAND_UNIFORM,
-    transport=None,
+    spec: SimSpec | None = None,
+    fields=_UNSET,
+    hash_backend=_UNSET,
+    strategy=_UNSET,
+    demand_mode=_UNSET,
+    transport=_UNSET,
     layers: Sequence[str] | None = None,
     only_used_leaves: bool = False,
-    engine: str = "numpy",
+    engine=_UNSET,
 ) -> TimelineResult:
     """Simulate a phase schedule step by step over one compiled fabric.
 
     Every step routes ONLY its active flows (the others are off the wire
     — that is the fix), through the identical ``simulate_paths`` →
     ``fim_from_counts`` → ``throughput_from_result`` pipeline the merged
-    front ends run, under the same ``strategy`` / ``demand_mode`` /
-    ``transport`` / ``engine`` contract (``engine="jax"`` routes every
-    step through the device engine).  The compiled fabric is shared
-    across steps;
+    front ends run, under the same ``SimSpec`` contract — pass one as
+    ``spec=`` or the legacy ``strategy`` / ``demand_mode`` /
+    ``transport`` / ``engine`` kwargs, not both (``strategy`` accepts a
+    registry name string or instance, resolved once up front and shared
+    by every step; ``engine="jax"`` routes every step through the
+    device engine).  The compiled fabric is shared across steps;
     a ``CompiledFabric`` passes through unchanged, so sweeps over
     schedules or strategies pay compilation once.
 
@@ -237,6 +239,9 @@ def simulate_timeline(
     ``moe_layers=0``) are dropped, with their duration excluded from the
     weighting; a schedule whose every step is empty raises.
     """
+    s = resolve_spec(spec, dict(
+        fields=fields, hash_backend=hash_backend, strategy=strategy,
+        demand_mode=demand_mode, transport=transport, engine=engine))
     comp = (fabric if isinstance(fabric, CompiledFabric)
             else compile_fabric(fabric))
     flows = resolve_flows(comp, workload)
@@ -248,13 +253,12 @@ def simulate_timeline(
     for step, sub in zip(schedule, parts):
         if not sub:
             continue
-        res = simulate_paths(comp, sub, seeds, fields=fields,
-                             hash_backend=hash_backend, strategy=strategy,
-                             demand_mode=demand_mode, engine=engine)
+        res = simulate_paths(comp, sub, seeds, spec=s)
         agg, per_layer = fim_from_counts(
             res.link_flow_counts(), comp,
             layers=layers, only_used_leaves=only_used_leaves)
-        tp = throughput_from_result(res, transport=transport, engine=engine)
+        tp = throughput_from_result(res, transport=s.transport,
+                                    engine=s.engine)
         steps.append(StepResult(
             step=step, flows=sub,
             fim=MonteCarloFim(seeds=res.seeds, aggregate=agg,

@@ -36,7 +36,10 @@ from collections.abc import Sequence
 import numpy as np
 
 from .compile_fabric import CompiledFabric, compile_fabric
-from .ecmp import FIELDS_5TUPLE, HASH_INIT, flow_fields_matrix
+from .ecmp import (
+    FIELDS_5TUPLE, FIELDS_IP_PAIR, FIELDS_VXLAN, HASH_INIT,
+    flow_fields_matrix,
+)
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription, synthesize_flows
 from .fim import Path
@@ -117,6 +120,114 @@ def flow_demand_weights(flows: Sequence[Flow], demand_mode: str) -> np.ndarray:
         return np.ones(n)
     b = np.maximum(b, 1.0)
     return b / b.mean()
+
+
+# ---------------------------------------------------------------------------
+# SimSpec: the one validated description of *how* to simulate
+# ---------------------------------------------------------------------------
+
+# Legacy-kwarg sentinel: front ends default every per-simulation kwarg to
+# this so "not passed" is distinguishable from "passed its default" — a
+# caller who mixes an explicit kwarg with ``spec=`` gets a loud error
+# instead of a silent winner.
+_UNSET = object()
+
+_KNOWN_FIELDS = (FIELDS_5TUPLE, FIELDS_VXLAN, FIELDS_IP_PAIR)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSpec:
+    """Every knob that selects *how* a simulation runs, in one place.
+
+    The four Monte-Carlo front ends (``simulate_paths``,
+    ``monte_carlo_fim``, ``monte_carlo_throughput``,
+    ``simulate_timeline``) historically re-declared the same sprawling
+    kwarg set with per-function validation; a ``SimSpec`` carries it
+    once and ``resolve()`` validates and normalizes everything in one
+    place.  Front ends accept ``spec=SimSpec(...)`` *or* the legacy
+    kwargs (which build a SimSpec internally); passing both raises.
+
+    Fields (all optional — the zero-argument ``SimSpec()`` is the
+    historical default everywhere):
+
+    * ``strategy`` — ``None`` (per-flow ECMP), a registry name string
+      (``"wave-congestion-aware"``), or a ``RoutingStrategy`` instance;
+    * ``demand_mode`` — ``"uniform"`` or ``"bytes"``
+      (``flow_demand_weights``);
+    * ``engine`` — ``"numpy"`` or ``"jax"``;
+    * ``hash_backend`` — ``"exact"``, ``"murmur"``, or ``None`` for the
+      engine's natural backend (``resolve_hash_backend`` owns the
+      engine->backend coupling);
+    * ``transport`` — ``None``/name/``TransportProfile`` for the
+      reordering-cost model (only throughput-bearing front ends read
+      it; carrying it on a paths-only spec is harmless);
+    * ``fields`` — the hash-field mode (``"5tuple"``/``"vxlan"``/
+      ``"ip-pair"``);
+    * ``max_hops`` — walk hop budget.
+
+    ``resolve()`` is idempotent, so a resolved spec can be handed from
+    front end to front end without re-validating work: names become
+    registry instances, ``hash_backend=None`` becomes the engine's
+    concrete backend, and every enum-ish field is range-checked.
+    Per-*call* inputs (the fabric, flows, seeds, a precomputed
+    ``field_matrix``, FIM layer selections) stay arguments — a spec
+    describes the simulation contract, not one invocation's data."""
+
+    strategy: object = None
+    demand_mode: str = DEMAND_UNIFORM
+    engine: str = ENGINE_NUMPY
+    hash_backend: str | None = None
+    transport: object = None
+    fields: str = FIELDS_5TUPLE
+    max_hops: int = 16
+
+    def resolve(self) -> "SimSpec":
+        if self.engine not in (ENGINE_NUMPY, ENGINE_JAX):
+            raise ValueError(
+                f"unknown engine {self.engine!r}; "
+                f"expected {ENGINE_NUMPY!r} or {ENGINE_JAX!r}")
+        if self.demand_mode not in (DEMAND_UNIFORM, DEMAND_BYTES):
+            raise ValueError(
+                f"unknown demand_mode {self.demand_mode!r}; "
+                f"expected {DEMAND_UNIFORM!r} or {DEMAND_BYTES!r}")
+        if self.fields not in _KNOWN_FIELDS:
+            raise ValueError(
+                f"unknown fields mode {self.fields!r}; "
+                f"have {_KNOWN_FIELDS}")
+        if int(self.max_hops) < 1:
+            raise ValueError(f"max_hops must be >= 1, got {self.max_hops}")
+        strategy = self.strategy
+        if strategy is not None:
+            from .strategies import resolve_strategy
+            strategy = resolve_strategy(strategy)
+        transport = self.transport
+        if transport is not None:
+            from .reordering import resolve_transport
+            transport = resolve_transport(transport)
+        return dataclasses.replace(
+            self, strategy=strategy, transport=transport,
+            hash_backend=resolve_hash_backend(self.hash_backend, self.engine),
+            max_hops=int(self.max_hops))
+
+
+def resolve_spec(spec: SimSpec | None, kwargs: dict) -> SimSpec:
+    """Front-end glue: the resolved ``SimSpec`` from ``spec=`` OR legacy
+    kwargs (values still ``_UNSET`` are dropped, so dataclass defaults
+    apply).  Mixing both raises — explicitly, naming the kwargs — and a
+    non-SimSpec ``spec`` fails as a type error rather than an attribute
+    error three calls deep."""
+    passed = {k: v for k, v in kwargs.items() if v is not _UNSET}
+    if spec is not None:
+        if passed:
+            raise ValueError(
+                "pass either spec= or the per-simulation kwargs, not both "
+                f"(got spec= together with {sorted(passed)})")
+        if not isinstance(spec, SimSpec):
+            raise TypeError(
+                f"spec must be a SimSpec, got {type(spec).__name__}")
+        return spec.resolve()
+    return SimSpec(**passed).resolve()
+
 
 _M1 = np.uint64(0xBF58476D1CE4E5B9)
 _M2 = np.uint64(0x94D049BB133111EB)
@@ -409,67 +520,64 @@ def simulate_paths(
     flows: Sequence[Flow],
     seeds: Sequence[int] | np.ndarray,
     *,
-    fields: str = FIELDS_5TUPLE,
-    hash_backend: str | None = None,
-    max_hops: int = 16,
+    spec: SimSpec | None = None,
+    fields=_UNSET,
+    hash_backend=_UNSET,
+    max_hops=_UNSET,
     field_matrix: np.ndarray | None = None,
-    strategy=None,
-    demand_mode: str = DEMAND_UNIFORM,
-    engine: str = ENGINE_NUMPY,
+    strategy=_UNSET,
+    demand_mode=_UNSET,
+    engine=_UNSET,
 ) -> VectorTraceResult:
     """Walk every flow through the fabric under every seed, vectorized.
 
-    The default (``strategy=None``) is per-flow ECMP, bit-identical to
-    ``EcmpRouting`` + ``FlowTracer``.  ``strategy`` accepts a registered
-    strategy name (``"ecmp"``, ``"prime-spray"``, ``"congestion-aware"``)
-    or a ``RoutingStrategy`` instance, and routes the whole simulation
-    through its vectorized implementation instead (the result may carry
-    flowlet columns — see ``VectorTraceResult``).
+    How to simulate is described by a ``SimSpec`` — pass one as
+    ``spec=`` or pass the legacy kwargs (``strategy=``,
+    ``demand_mode=``, ``engine=``, ``hash_backend=``, ``fields=``,
+    ``max_hops=``), which build the spec internally; mixing both
+    raises.  See ``SimSpec`` for the field contracts.
 
-    ``engine`` selects the walk implementation: ``"numpy"`` (host, the
-    differential reference) or ``"jax"`` (jitted device walk, identical
-    results — bit-identical under ``hash_backend="exact"``).  Strategies
-    receive the engine the same guarded way ``demand_mode`` travels, so
-    pre-engine custom strategies keep working on the default.
+    The default is per-flow ECMP, bit-identical to ``EcmpRouting`` +
+    ``FlowTracer``; ``strategy`` (name string or instance) routes the
+    whole simulation through that strategy's vectorized implementation
+    instead (the result may carry flowlet columns — see
+    ``VectorTraceResult``).
 
-    ``demand_mode`` selects the flow demand model: ``"uniform"`` (every
-    flow weighs 1) or ``"bytes"`` (flows weigh their ``Flow.bytes``, see
-    ``flow_demand_weights``), which downstream FIM / max-min consumers
-    pick up from ``VectorTraceResult.flow_demand``.  Strategies may also
-    *route* on it — congestion-aware places heavy flows first.
-
-    ``field_matrix`` optionally supplies precomputed ``flow_fields_matrix``
-    output so repeated sweeps over the same flow table skip the per-flow
-    CRC pass.
+    ``field_matrix`` optionally supplies precomputed
+    ``flow_fields_matrix`` output so repeated sweeps over the same flow
+    table skip the per-flow CRC pass (per-call data, so it stays an
+    argument rather than a spec field).
     """
+    s = resolve_spec(spec, dict(
+        fields=fields, hash_backend=hash_backend, max_hops=max_hops,
+        strategy=strategy, demand_mode=demand_mode, engine=engine))
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     flows = list(flows)
     seeds_u64 = normalize_seeds(seeds)
-    hash_backend = resolve_hash_backend(hash_backend, engine)
     if len(flows) == 0:
         raise ValueError("simulate_paths needs at least one flow")
-    if strategy is not None:
-        from .strategies import resolve_strategy
+    if s.strategy is not None:
         # demand_mode / engine are only forwarded when they actually ask
         # for something: custom strategies registered against the older
         # route() signatures keep working under the defaults, and a
         # non-default request against one fails loudly (TypeError)
         # instead of silently dropping the ask
-        extra = ({} if demand_mode == DEMAND_UNIFORM
-                 else {"demand_mode": demand_mode})
-        if engine != ENGINE_NUMPY:
-            extra["engine"] = engine
-        return resolve_strategy(strategy).route(
-            comp, flows, seeds_u64, fields=fields, hash_backend=hash_backend,
-            max_hops=max_hops, field_matrix=field_matrix, **extra)
-    flow_demand = flow_demand_weights(flows, demand_mode)
+        extra = ({} if s.demand_mode == DEMAND_UNIFORM
+                 else {"demand_mode": s.demand_mode})
+        if s.engine != ENGINE_NUMPY:
+            extra["engine"] = s.engine
+        return s.strategy.route(
+            comp, flows, seeds_u64, fields=s.fields,
+            hash_backend=s.hash_backend, max_hops=s.max_hops,
+            field_matrix=field_matrix, **extra)
+    flow_demand = flow_demand_weights(flows, s.demand_mode)
     field_mat = (field_matrix if field_matrix is not None
-                 else flow_fields_matrix(flows, fields))  # (N, F) uint64
+                 else flow_fields_matrix(flows, s.fields))  # (N, F) uint64
     src_dev, dst_dev, src_key, dst_key = comp.flow_endpoint_ids(flows)
     link_ids = ecmp_walk(
         comp, src_dev, dst_dev, src_key, dst_key, field_mat, seeds_u64,
-        hash_backend=hash_backend, max_hops=max_hops,
-        describe=lambda n: f"flow {flows[n].flow_id}", engine=engine)
+        hash_backend=s.hash_backend, max_hops=s.max_hops,
+        describe=lambda n: f"flow {flows[n].flow_id}", engine=s.engine)
     return VectorTraceResult(
         compiled=comp, flows=flows, seeds=seeds_u64, link_ids=link_ids,
         flow_demand=flow_demand)
@@ -584,39 +692,44 @@ def monte_carlo_fim(
     workload: WorkloadDescription | Sequence[Flow],
     seeds: Sequence[int] | np.ndarray,
     *,
-    fields: str = FIELDS_5TUPLE,
-    hash_backend: str | None = None,
+    spec: SimSpec | None = None,
+    fields=_UNSET,
+    hash_backend=_UNSET,
     layers: Sequence[str] | None = None,
     only_used_leaves: bool = False,
-    strategy=None,
-    demand_mode: str = DEMAND_UNIFORM,
-    engine: str = ENGINE_NUMPY,
+    strategy=_UNSET,
+    demand_mode=_UNSET,
+    engine=_UNSET,
 ) -> MonteCarloFim:
     """FIM distribution of a routing strategy across a hash-seed sweep.
 
     ``workload`` may be a ``WorkloadDescription`` (flows are synthesized
     the standard way, NIC count inferred from the fabric) or an explicit
-    flow list.  ``strategy`` and ``demand_mode`` follow the
-    ``simulate_paths`` contract (default: per-flow ECMP, unit demand;
-    ``demand_mode="bytes"`` makes the FIM byte-weighted).
+    flow list.  How to simulate comes from a ``SimSpec`` — pass one as
+    ``spec=`` or the legacy kwargs, not both (``simulate_paths``
+    contract; default: per-flow ECMP, unit demand;
+    ``demand_mode="bytes"`` makes the FIM byte-weighted).  ``layers`` /
+    ``only_used_leaves`` describe what to *measure*, not how to route,
+    so they stay per-call arguments.
 
     ``engine="jax"`` with plain ECMP takes the fused device pipeline
     (walk + counts + FIM in one pass, ``jax_engine``); other strategies
     route on the jax walk and aggregate on host.
     """
+    s = resolve_spec(spec, dict(
+        fields=fields, hash_backend=hash_backend, strategy=strategy,
+        demand_mode=demand_mode, engine=engine))
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
-    if engine != ENGINE_NUMPY and _is_plain_ecmp(strategy):
+    if s.engine != ENGINE_NUMPY and _is_plain_ecmp(s.strategy):
         from .jax_engine import fused_monte_carlo_fim, resolve_engine
-        resolve_engine(engine)
+        resolve_engine(s.engine)
         return fused_monte_carlo_fim(
-            comp, workload, seeds, fields=fields,
-            hash_backend=resolve_hash_backend(hash_backend, engine),
+            comp, workload, seeds, fields=s.fields,
+            hash_backend=s.hash_backend,
             layers=layers, only_used_leaves=only_used_leaves,
-            demand_mode=demand_mode)
+            demand_mode=s.demand_mode)
     flows = resolve_flows(comp, workload)
-    res = simulate_paths(comp, flows, seeds, fields=fields,
-                         hash_backend=hash_backend, strategy=strategy,
-                         demand_mode=demand_mode, engine=engine)
+    res = simulate_paths(comp, flows, seeds, spec=s)
     agg, per_layer = fim_from_counts(
         res.link_flow_counts(), comp,
         layers=layers, only_used_leaves=only_used_leaves)

@@ -43,12 +43,12 @@ from collections.abc import Sequence
 import numpy as np
 
 from .compile_fabric import CompiledFabric, compile_fabric
-from .ecmp import FIELDS_5TUPLE
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription
 from .vector_sim import (
-    DEMAND_UNIFORM, ENGINE_NUMPY, VectorTraceResult, _is_plain_ecmp,
-    resolve_flows, resolve_hash_backend, segment_reduce, simulate_paths,
+    ENGINE_NUMPY, SimSpec, VectorTraceResult, _UNSET,
+    _is_plain_ecmp, resolve_flows, resolve_spec,
+    segment_reduce, simulate_paths,
 )
 
 # Seeds per cache block: per-cell state is ~5 arrays of seed_block * L
@@ -528,23 +528,25 @@ def monte_carlo_throughput(
     workload: WorkloadDescription | Sequence[Flow],
     seeds: Sequence[int] | np.ndarray,
     *,
-    fields: str = FIELDS_5TUPLE,
-    hash_backend: str | None = None,
+    spec: SimSpec | None = None,
+    fields=_UNSET,
+    hash_backend=_UNSET,
     field_matrix: np.ndarray | None = None,
-    strategy=None,
-    demand_mode: str = DEMAND_UNIFORM,
-    transport=None,
-    engine: str = ENGINE_NUMPY,
+    strategy=_UNSET,
+    demand_mode=_UNSET,
+    transport=_UNSET,
+    engine=_UNSET,
 ) -> MonteCarloThroughput:
     """Max-min throughput distribution of a routing strategy across a
     seed sweep.
 
     ``workload`` may be a ``WorkloadDescription`` (flows synthesized the
     standard way, NIC count inferred from the fabric) or an explicit flow
-    list — the same front-end contract as ``monte_carlo_fim``.
-    ``strategy`` and ``demand_mode`` follow the ``simulate_paths``
-    contract (default: per-flow ECMP, unit demand;
-    ``demand_mode="bytes"`` allocates weighted max-min shares);
+    list — the same front-end contract as ``monte_carlo_fim``.  How to
+    simulate comes from a ``SimSpec`` — pass one as ``spec=`` or the
+    legacy kwargs, not both.  ``strategy`` and ``demand_mode`` follow
+    the ``simulate_paths`` contract (default: per-flow ECMP, unit
+    demand; ``demand_mode="bytes"`` allocates weighted max-min shares);
     ``transport`` the ``throughput_from_result`` contract (reordering
     cost model for ``goodput``; default ``"ideal"`` = reordering-free).
 
@@ -553,18 +555,19 @@ def monte_carlo_throughput(
     strategies route on the jax walk and fill/expose on device with
     host glue in between.
     """
+    s = resolve_spec(spec, dict(
+        fields=fields, hash_backend=hash_backend, strategy=strategy,
+        demand_mode=demand_mode, transport=transport, engine=engine))
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
-    if engine != ENGINE_NUMPY and _is_plain_ecmp(strategy):
+    if s.engine != ENGINE_NUMPY and _is_plain_ecmp(s.strategy):
         from .jax_engine import fused_monte_carlo_throughput, resolve_engine
-        resolve_engine(engine)
+        resolve_engine(s.engine)
         return fused_monte_carlo_throughput(
-            comp, workload, seeds, fields=fields,
-            hash_backend=resolve_hash_backend(hash_backend, engine),
-            demand_mode=demand_mode, transport=transport,
+            comp, workload, seeds, fields=s.fields,
+            hash_backend=s.hash_backend,
+            demand_mode=s.demand_mode, transport=s.transport,
             field_matrix=field_matrix)
     flows = resolve_flows(comp, workload)
-    res = simulate_paths(comp, flows, seeds, fields=fields,
-                         hash_backend=hash_backend, field_matrix=field_matrix,
-                         strategy=strategy, demand_mode=demand_mode,
-                         engine=engine)
-    return throughput_from_result(res, transport=transport, engine=engine)
+    res = simulate_paths(comp, flows, seeds, spec=s,
+                         field_matrix=field_matrix)
+    return throughput_from_result(res, transport=s.transport, engine=s.engine)

@@ -215,3 +215,81 @@ def test_sparse_nic_numbering_resolves_flows():
     assert used == {0, 4}
     mc = monte_carlo_fim(comp, wl, [0, 1, 2])
     assert mc.aggregate.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# SimSpec: the unified front-end contract
+# ---------------------------------------------------------------------------
+
+
+def test_simspec_equals_legacy_kwargs(paper_compiled, paper_setup):
+    from repro.core import SimSpec
+    _, _, flows = paper_setup
+    seeds = [0, 7, 1234567]
+    legacy = simulate_paths(paper_compiled, flows, seeds,
+                            fields=FIELDS_IP_PAIR, demand_mode="bytes")
+    spec = simulate_paths(paper_compiled, flows, seeds,
+                          spec=SimSpec(fields=FIELDS_IP_PAIR,
+                                       demand_mode="bytes"))
+    np.testing.assert_array_equal(spec.link_ids, legacy.link_ids)
+    np.testing.assert_array_equal(spec.flow_demand, legacy.flow_demand)
+    # passing explicit kwargs that merely repeat the defaults is the
+    # legacy path too, bit for bit
+    dflt = simulate_paths(paper_compiled, flows, seeds,
+                          strategy=None, demand_mode="uniform",
+                          engine="numpy")
+    base = simulate_paths(paper_compiled, flows, seeds)
+    np.testing.assert_array_equal(dflt.link_ids, base.link_ids)
+
+
+def test_simspec_and_kwargs_together_raise(paper_compiled, paper_setup):
+    from repro.core import SimSpec
+    _, _, flows = paper_setup
+    with pytest.raises(ValueError, match="not both.*demand_mode"):
+        simulate_paths(paper_compiled, flows[:4], [0], spec=SimSpec(),
+                       demand_mode="bytes")
+    with pytest.raises(ValueError, match="not both"):
+        monte_carlo_fim(paper_compiled, flows[:4], [0], spec=SimSpec(),
+                        engine="numpy")
+    with pytest.raises(TypeError, match="SimSpec"):
+        simulate_paths(paper_compiled, flows[:4], [0], spec="jax")
+
+
+def test_simspec_resolve_validates_and_is_idempotent():
+    from repro.core import SimSpec, WaveCongestionAware
+    from repro.core.reordering import TransportProfile
+    s = SimSpec(strategy="wave-congestion-aware", transport="roce-nack",
+                engine="jax").resolve()
+    assert isinstance(s.strategy, WaveCongestionAware)
+    assert isinstance(s.transport, TransportProfile)
+    assert s.hash_backend is not None          # engine-coupled concrete
+    s2 = s.resolve()
+    assert s2.strategy is s.strategy and s2.transport is s.transport
+    for bad in (SimSpec(engine="cuda"), SimSpec(demand_mode="packets"),
+                SimSpec(fields="l4"), SimSpec(max_hops=0)):
+        with pytest.raises(ValueError):
+            bad.resolve()
+
+
+def test_simspec_spans_all_front_ends(paper_compiled, paper_setup):
+    from repro.core import (
+        SimSpec, monte_carlo_throughput, paper_testbed_llm_schedule,
+        simulate_timeline,
+    )
+    _, wl, flows = paper_setup
+    seeds = [0, 3]
+    s = SimSpec(strategy="prime-spray", transport="roce-nack")
+    tp_legacy = monte_carlo_throughput(paper_compiled, flows, seeds,
+                                       strategy="prime-spray",
+                                       transport="roce-nack")
+    tp_spec = monte_carlo_throughput(paper_compiled, flows, seeds, spec=s)
+    np.testing.assert_array_equal(tp_spec.goodput, tp_legacy.goodput)
+    # simulate_timeline resolves strategy names through the same spec —
+    # the name form works uniformly across all four front ends
+    _, lflows, _, sched = paper_testbed_llm_schedule()
+    tl_legacy = simulate_timeline(paper_compiled, lflows, sched, seeds,
+                                  strategy="prime-spray",
+                                  transport="roce-nack")
+    tl_spec = simulate_timeline(paper_compiled, lflows, sched, seeds, spec=s)
+    np.testing.assert_array_equal(tl_spec.fim, tl_legacy.fim)
+    np.testing.assert_array_equal(tl_spec.goodput, tl_legacy.goodput)
