@@ -28,11 +28,12 @@ from .vector_sim import (
     fim_from_counts, fim_vector, monte_carlo_fim, resolve_flows,
     DEMAND_UNIFORM, DEMAND_BYTES, flow_demand_weights,
     ENGINE_NUMPY, ENGINE_JAX, resolve_hash_backend,
+    TIMING_STATIC, TIMING_EVENT,
 )
 from .vector_throughput import (
     MonteCarloThroughput, batched_max_min, max_min_rates,
     flow_rates_from_flowlets, pair_rate_matrix, throughput_from_result,
-    monte_carlo_throughput,
+    monte_carlo_throughput, DepartureFill, departure_fill,
 )
 from .strategies import (
     RoutingStrategy, EcmpStrategy, PrimeSpraying, AdaptiveSpraying,
@@ -45,10 +46,12 @@ from .reordering import (
     ROCE_NACK_ANCHORS, STRACK_ANCHORS, calibrate_transport,
     register_transport, resolve_transport, available_transports,
     flowlet_exposure, reordering_efficiency,
+    DEFAULT_RTT_SECONDS, rtt_round_budget,
 )
 from .timeline import (
     TimelineStep, TimelineResult, StepResult, simulate_timeline,
     merged_step, partition_flows, flow_channel,
+    register_channel, known_channels, channel_name, step_byte_totals,
 )
 from .fim import (
     fim, per_layer_fim, link_flow_counts, max_min_throughput,
@@ -90,9 +93,10 @@ __all__ = [
     "fim_from_counts", "fim_vector", "monte_carlo_fim", "resolve_flows",
     "DEMAND_UNIFORM", "DEMAND_BYTES", "flow_demand_weights",
     "ENGINE_NUMPY", "ENGINE_JAX", "resolve_hash_backend",
+    "TIMING_STATIC", "TIMING_EVENT",
     "MonteCarloThroughput", "batched_max_min", "max_min_rates",
     "flow_rates_from_flowlets", "pair_rate_matrix", "throughput_from_result",
-    "monte_carlo_throughput",
+    "monte_carlo_throughput", "DepartureFill", "departure_fill",
     "RoutingStrategy", "EcmpStrategy", "PrimeSpraying", "AdaptiveSpraying",
     "CongestionAware", "WaveCongestionAware",
     "register_strategy", "resolve_strategy", "available_strategies",
@@ -101,8 +105,10 @@ __all__ = [
     "ROCE_NACK_ANCHORS", "STRACK_ANCHORS", "calibrate_transport",
     "register_transport", "resolve_transport", "available_transports",
     "flowlet_exposure", "reordering_efficiency",
+    "DEFAULT_RTT_SECONDS", "rtt_round_budget",
     "TimelineStep", "TimelineResult", "StepResult", "simulate_timeline",
     "merged_step", "partition_flows", "flow_channel",
+    "register_channel", "known_channels", "channel_name", "step_byte_totals",
     "fim", "per_layer_fim", "link_flow_counts", "max_min_throughput",
     "per_pair_throughput", "layer_load_stats", "LayerLoadStats",
     "FlowTracer", "TraceResult", "LatencyModel", "ConnectionManager",

@@ -34,7 +34,7 @@ from .flows import Flow, WorkloadDescription, workload_from_flows
 from .hlo_flows import (
     CollectiveOp, EdgeClassCounts, collectives_to_flows, wire_and_operand,
 )
-from .timeline import TimelineStep
+from .timeline import TimelineStep, flow_channel, register_channel
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -183,8 +183,14 @@ def multipod_llm_workload(
 # Phase schedules (core/timeline.py)
 # ---------------------------------------------------------------------------
 
-#: channel map of ``llm_collective_ops``, the schedule vocabulary
-CH_GRAD_AR, CH_FSDP_AG, CH_FSDP_RS, CH_MOE_A2A, CH_BARRIER = 1, 2, 3, 4, 5
+#: channel map of ``llm_collective_ops``, the schedule vocabulary —
+#: registered by name so schedule-validation errors print ``CH_*``
+#: identifiers instead of bare ints (core/timeline.py registry)
+CH_GRAD_AR = register_channel(1, "CH_GRAD_AR")
+CH_FSDP_AG = register_channel(2, "CH_FSDP_AG")
+CH_FSDP_RS = register_channel(3, "CH_FSDP_RS")
+CH_MOE_A2A = register_channel(4, "CH_MOE_A2A")
+CH_BARRIER = register_channel(5, "CH_BARRIER")
 
 #: every collective runs alone, in training-step order — the synchronous
 #: schedule of a vanilla FSDP/EP step (no comm/comm overlap)
@@ -210,10 +216,14 @@ def llm_collective_phases(
     phase and the MoE shuffle into the forward phase, the usual
     comm/comm overlap; the barrier stays its own (tiny) step.
 
-    Steps carry equal default durations (see core/timeline.py for why
-    durations, not byte shares).  Phases whose collective is absent from
-    the spec (``moe_layers=0``) still appear; ``simulate_timeline``
-    drops empty steps.
+    Steps carry equal default durations, read under ``timing="static"``
+    (see core/timeline.py for why durations, not byte shares; under
+    ``timing="event"`` durations are derived from the flows' byte
+    volumes and the routed goodput instead).  Phases whose collective is
+    absent from the spec (``moe_layers=0``) are dropped here — and
+    ``llm_schedule`` additionally filters against the channels the
+    *flows* actually carry, because ``simulate_timeline`` validates
+    strictly and raises on a step no flow serves.
     """
     ops = llm_collective_ops(spec)
     if mode == SCHEDULE_SEQUENTIAL:
@@ -249,9 +259,25 @@ def llm_schedule(
            list[TimelineStep]]:
     """Schedule-emitting variant of ``llm_workload``: the same
     (workload, flows, stats) triple plus the phase schedule, ready for
-    ``simulate_timeline(fabric, flows, schedule, seeds)``."""
+    ``simulate_timeline(fabric, flows, schedule, seeds)``.
+
+    The schedule is filtered against the channels the emitted flows
+    actually carry: a collective can be present in the op list yet
+    produce zero DCN flows (e.g. a ring confined to one pod rides the
+    ICI torus), and ``partition_flows`` rightly refuses a step no flow
+    serves.  Each flow carries its byte volume (``Flow.bytes``), which
+    is what gives ``timing="event"`` its per-step byte totals
+    (``step_byte_totals``)."""
     _, schedule = llm_collective_phases(spec, mode)
     wl, flows, stats = llm_workload(spec, host_name=host_name)
+    present = {flow_channel(f) for f in flows}
+    schedule = [
+        TimelineStep(s.name,
+                     tuple(ch for ch in s.channels if ch in present),
+                     s.duration)
+        for s in schedule
+        if any(ch in present for ch in s.channels)
+    ]
     return wl, flows, stats, schedule
 
 

@@ -73,6 +73,12 @@ import numpy as np
 from .vector_sim import VectorTraceResult, segment_reduce
 
 
+#: one fabric round-trip at datacenter scale (tens of microseconds) —
+#: the unit the event-timed timeline prices adaptation in: a transfer
+#: shorter than one RTT never sees feedback, so it cannot re-spray
+DEFAULT_RTT_SECONDS = 25e-6
+
+
 @dataclasses.dataclass(frozen=True)
 class TransportProfile:
     """Reordering tolerance of a transport: exposure -> efficiency.
@@ -81,17 +87,28 @@ class TransportProfile:
     exposure) and ``floor`` the asymptotic efficiency under unbounded
     reordering (the transport's worst case).  ``alpha=0`` or ``floor=1``
     makes reordering free.
+
+    ``rtt_seconds`` is the transport's feedback loop length: under
+    event-timed replay (``timing="event"``) an ``AdaptiveSpraying`` step
+    gets one re-spray opportunity per RTT of its *derived* duration
+    (``rtt_round_budget``), so the exposure charged for adaptation
+    scales with how long the step actually holds the wire.  Static
+    snapshots never read it.
     """
 
     name: str
     alpha: float
     floor: float
+    rtt_seconds: float = DEFAULT_RTT_SECONDS
 
     def __post_init__(self):
         if self.alpha < 0:
             raise ValueError(f"alpha must be >= 0, got {self.alpha}")
         if not 0.0 < self.floor <= 1.0:
             raise ValueError(f"floor must be in (0, 1], got {self.floor}")
+        if not self.rtt_seconds > 0:
+            raise ValueError(
+                f"rtt_seconds must be > 0, got {self.rtt_seconds}")
 
 
 def calibrate_transport(
@@ -271,6 +288,29 @@ def flowlet_exposure(
     # reorder nothing; scrub the fallback's inf/nan seeds
     exposure = np.where(np.isfinite(exposure), exposure, 0.0)
     return exposure if extra is None else exposure + extra
+
+
+def rtt_round_budget(duration_s: float, rtt_s: float, cap: int) -> int:
+    """Adaptation rounds a transfer of ``duration_s`` seconds affords.
+
+    ``AdaptiveSpraying`` re-picks entropy once per RTT of congestion
+    feedback; under event-timed replay the step duration is *derived*
+    from the routed goodput, so the honest round budget is the number of
+    RTTs the step actually spans: ``ceil(duration / rtt)``, floored at 1
+    (the initial pick always happens — a sub-RTT barrier simply cannot
+    adapt) and capped at the strategy's configured ``rounds`` (the
+    herd-damped adaptation converges; simulating thousands of identical
+    quiet rounds would only cost time).  This is what makes re-spray
+    exposure a per-unit-*time* charge: a step that holds the wire longer
+    pays for more adaptation, a blink-length step pays for none.
+    """
+    if not rtt_s > 0:
+        raise ValueError(f"rtt_s must be > 0, got {rtt_s}")
+    if cap < 1:
+        raise ValueError(f"cap must be >= 1, got {cap}")
+    if not duration_s >= 0:                # also rejects nan
+        raise ValueError(f"duration_s must be >= 0, got {duration_s}")
+    return int(np.clip(np.ceil(duration_s / rtt_s), 1, cap))
 
 
 def reordering_efficiency(

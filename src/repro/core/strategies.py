@@ -361,6 +361,21 @@ class AdaptiveSpraying(PrimeSpraying):
         self.respray_cost = float(respray_cost)
         self.move_prob = float(move_prob)
 
+    def with_rounds(self, rounds: int) -> "AdaptiveSpraying":
+        """A copy of this strategy with a different round budget — every
+        other knob unchanged.  Event-timed replay (core/timeline.py)
+        uses it to express ``rounds`` in RTTs of the *derived* step
+        duration (``reordering.rtt_round_budget``): ``self.rounds``
+        becomes the cap, and a step shorter than one RTT routes with the
+        static round-1 allocation."""
+        if rounds == self.rounds:
+            return self
+        return AdaptiveSpraying(
+            self.flowlets, self.parts, min_bytes=self.min_bytes,
+            volume_k=self.volume_k, rounds=rounds,
+            ecn_factor=self.ecn_factor, respray_cost=self.respray_cost,
+            move_prob=self.move_prob)
+
     def route(self, comp, flows, seeds_u64, *, fields=FIELDS_5TUPLE,
               hash_backend=EXACT, max_hops=16, field_matrix=None,
               demand_mode=DEMAND_UNIFORM, engine=ENGINE_NUMPY):

@@ -134,6 +134,12 @@ _UNSET = object()
 
 _KNOWN_FIELDS = (FIELDS_5TUPLE, FIELDS_VXLAN, FIELDS_IP_PAIR)
 
+TIMING_STATIC = "static"  # exogenous step durations (TimelineStep.duration)
+TIMING_EVENT = "event"    # durations derived from routed goodput: a step
+#                           ends when its slowest flow's bytes finish, and
+#                           flows depart mid-step (vector_throughput.
+#                           departure_fill); see core/timeline.py
+
 
 @dataclasses.dataclass(frozen=True)
 class SimSpec:
@@ -163,7 +169,12 @@ class SimSpec:
       it; carrying it on a paths-only spec is harmless);
     * ``fields`` — the hash-field mode (``"5tuple"``/``"vxlan"``/
       ``"ip-pair"``);
-    * ``max_hops`` — walk hop budget.
+    * ``max_hops`` — walk hop budget;
+    * ``timing`` — how ``simulate_timeline`` prices the time axis:
+      ``"static"`` (exogenous ``TimelineStep.duration`` weights, the
+      historical model) or ``"event"`` (step durations *derived* from
+      the achieved max-min goodput, with flows departing as their bytes
+      finish — core/timeline.py).  Snapshot front ends ignore it.
 
     ``resolve()`` is idempotent, so a resolved spec can be handed from
     front end to front end without re-validating work: names become
@@ -180,12 +191,17 @@ class SimSpec:
     transport: object = None
     fields: str = FIELDS_5TUPLE
     max_hops: int = 16
+    timing: str = TIMING_STATIC
 
     def resolve(self) -> "SimSpec":
         if self.engine not in (ENGINE_NUMPY, ENGINE_JAX):
             raise ValueError(
                 f"unknown engine {self.engine!r}; "
                 f"expected {ENGINE_NUMPY!r} or {ENGINE_JAX!r}")
+        if self.timing not in (TIMING_STATIC, TIMING_EVENT):
+            raise ValueError(
+                f"unknown timing {self.timing!r}; "
+                f"expected {TIMING_STATIC!r} or {TIMING_EVENT!r}")
         if self.demand_mode not in (DEMAND_UNIFORM, DEMAND_BYTES):
             raise ValueError(
                 f"unknown demand_mode {self.demand_mode!r}; "

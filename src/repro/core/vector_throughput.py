@@ -375,6 +375,157 @@ def flow_rates_from_flowlets(result: VectorTraceResult,
 
 
 @dataclasses.dataclass
+class DepartureFill:
+    """Result of a departure-ordered max-min drain (``departure_fill``).
+
+    ``completion[n, s]`` is the absolute time (seconds) at which tensor
+    column ``n``'s bytes finish under seed ``s``; ``duration[s]`` is the
+    completion time of the slowest column — the step's derived duration;
+    ``rounds`` counts the re-fill rounds the drain needed (one per
+    distinct departure epoch, bounded by the column count).
+    """
+
+    completion: np.ndarray               # (Nf, S) seconds per column
+    duration: np.ndarray                 # (S,) slowest-column completion
+    rounds: int
+
+
+def departure_fill(
+    link_ids: np.ndarray,
+    link_gbps: np.ndarray,
+    col_gbits: np.ndarray,
+    *,
+    weights: np.ndarray | None = None,
+    efficiency: np.ndarray | None = None,
+    assume_unique: bool = False,
+    seed_block: int = DEFAULT_SEED_BLOCK,
+    initial_rates: np.ndarray | None = None,
+    engine: str = ENGINE_NUMPY,
+) -> DepartureFill:
+    """Water-filling with departures over an ``(H, N, S)`` link-id tensor.
+
+    Every column ``n`` carries ``col_gbits[n]`` gigabits.  All columns
+    start draining at their max-min rate (``batched_max_min``, weighted
+    by ``weights`` exactly like ``max_min_rates``); the earliest-finishing
+    cells *depart* — their remaining bytes hit zero — and the survivors'
+    rates are re-filled over the **same** path tensor with the departed
+    (column, seed) cells deactivated, so tail flows speed up as elephants
+    drain.  No re-walk happens: deactivating a cell is writing ``-1``
+    over its link ids, which the fill already treats as "crosses no
+    links" per (column, seed) cell.  Seeds progress independently (each
+    has its own departure order); the fill itself stays batched across
+    the surviving seed-set every round, and fully-drained columns are
+    compacted out of the tensor between rounds.
+
+    ``efficiency`` optionally scales each cell's drain rate (goodput =
+    rate x efficiency, the transport reordering model); it is held fixed
+    across re-fills — the exposure a routing assignment induces is a
+    property of the committed paths, not of who has already left the
+    wire.  ``initial_rates`` lets callers that already ran the full-set
+    fill (``throughput_from_result``) reuse it as round 1; it is only
+    trusted when every column starts active, otherwise it is recomputed.
+
+    Zero-gigabit columns complete at t=0 and never contend; columns that
+    cross no links drain at infinite rate and also complete at t=0.
+    Times are seconds for ``col_gbits`` in gigabits and ``link_gbps`` in
+    Gb/s (``bytes * 8e-9`` converts).
+
+    ``engine="jax"`` delegates the drain to this host loop (after
+    validating the engine name): every departure epoch re-fills a
+    *shrunken* column set, which under jit would re-trace per shape —
+    and the numpy compacting fill already dominates the jax fill ~17x on
+    CPU (PR 7 measurement, see ROADMAP) before paying any of that.  The
+    walk that produced ``link_ids`` may of course come from either
+    engine; the drain is bit-identical downstream of it.
+    """
+    if engine != ENGINE_NUMPY:
+        from .jax_engine import resolve_engine
+        resolve_engine(engine)
+    link_ids = np.asarray(link_ids)
+    if link_ids.ndim != 3:
+        raise ValueError(f"link_ids must be (H, N, S), got {link_ids.shape}")
+    if not assume_unique:
+        link_ids = dedup_link_ids(link_ids)
+    H, N, S = link_ids.shape
+    gb = np.asarray(col_gbits, np.float64)
+    if gb.shape != (N,):
+        raise ValueError(
+            f"col_gbits must be ({N},) to match link_ids columns, "
+            f"got {gb.shape}")
+    if (gb < 0).any() or not np.isfinite(gb).all():
+        raise ValueError("col_gbits must be finite and >= 0")
+    if efficiency is None:
+        eff = np.ones((N, S))
+    else:
+        eff = np.asarray(efficiency, np.float64)
+        if eff.shape != (N, S):
+            raise ValueError(
+                f"efficiency must be ({N}, {S}), got {eff.shape}")
+        if not ((eff > 0) & np.isfinite(eff)).all():
+            raise ValueError("efficiency must be finite and > 0")
+    completion = np.zeros((N, S))
+    if N == 0 or S == 0 or H == 0:
+        return DepartureFill(completion=completion,
+                             duration=completion.max(axis=0, initial=0.0),
+                             rounds=0)
+    t = np.zeros(S)
+    rem = np.broadcast_to(gb[:, None], (N, S)).copy()
+    active = rem > 0.0
+    ids = link_ids.copy()
+    ids[:, ~active] = -1                   # zero-gigabit cells never contend
+    rounds = 0
+    while True:
+        alive = active.any(axis=1)         # column compaction
+        if not alive.any():
+            break
+        rounds += 1
+        if rounds > N + 1:                 # >= 1 cell departs per round per
+            raise RuntimeError(            # active seed, so N+1 is unreachable
+                "departure_fill failed to converge (rate degeneracy?)")
+        sel = np.flatnonzero(alive)
+        sub_ids = ids[:, sel]
+        if rounds == 1 and initial_rates is not None and alive.all():
+            rates = np.asarray(initial_rates, np.float64)
+            if rates.shape != (N, S):
+                raise ValueError(
+                    f"initial_rates must be ({N}, {S}), got {rates.shape}")
+        else:
+            rates = batched_max_min(
+                sub_ids, link_gbps, assume_unique=True,
+                seed_block=seed_block,
+                weights=None if weights is None else
+                np.asarray(weights, np.float64)[sel])
+        act = active[sel]
+        good = rates * eff[sel]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            fin = np.where(act, rem[sel] / good, np.inf)
+        fin = np.where(np.isnan(fin), np.inf, fin)
+        dt = fin.min(axis=0)               # (S,) next departure horizon
+        seed_active = act.any(axis=0)
+        if (seed_active & ~np.isfinite(dt)).any():
+            raise RuntimeError(
+                "departure_fill: active flow with zero goodput can never "
+                "finish (zero-capacity bottleneck link?)")
+        dt0 = np.where(seed_active, dt, 0.0)
+        # everything within float tolerance of the horizon departs together
+        depart = act & (fin <= dt[None, :] * (1.0 + 1e-12))
+        comp_sel = completion[sel]
+        comp_sel[depart] = (t[None, :] + fin)[depart]
+        completion[sel] = comp_sel
+        drain = np.where(act & np.isfinite(good), good, 0.0) * dt0[None, :]
+        rem_sel = np.maximum(rem[sel] - drain, 0.0)
+        rem_sel[depart] = 0.0
+        rem[sel] = rem_sel
+        t += dt0
+        active[sel] = act & ~depart
+        sub_ids[:, depart] = -1            # departed cells leave the wire
+        ids[:, sel] = sub_ids
+    return DepartureFill(completion=completion,
+                         duration=completion.max(axis=0, initial=0.0),
+                         rounds=rounds)
+
+
+@dataclasses.dataclass
 class MonteCarloThroughput:
     """Per-flow and per-pair max-min rate distributions over a seed sweep.
 

@@ -253,7 +253,7 @@ def test_timeline_engine_parity(paper8):
     comp, flows = paper8
     labeled = [dataclasses.replace(f, label=f"x#ch{i % 2}")
                for i, f in enumerate(flows)]
-    sched = [TimelineStep("a", (0,)), TimelineStep("b", (1,), weight=2.0)]
+    sched = [TimelineStep("a", (0,)), TimelineStep("b", (1,), duration=2.0)]
     a = simulate_timeline(comp, labeled, sched, [0, 1, 2],
                           demand_mode="bytes", transport="roce-nack")
     b = simulate_timeline(comp, labeled, sched, [0, 1, 2],

@@ -151,8 +151,8 @@ def test_moe_free_spec_drops_moe_step():
 def test_timeline_step_validation():
     with pytest.raises(ValueError, match="no channels"):
         TimelineStep("empty", ())
-    with pytest.raises(ValueError, match="weight"):
-        TimelineStep("bad", (1,), weight=0.0)
+    with pytest.raises(ValueError, match="duration"):
+        TimelineStep("bad", (1,), duration=0.0)
 
 
 def test_partition_rejects_stray_and_unlabeled(paper_setup_small):
@@ -164,16 +164,19 @@ def test_partition_rejects_stray_and_unlabeled(paper_setup_small):
         partition_flows(plain_flows, schedule)
 
 
-def test_empty_schedule_and_empty_steps(testbed_llm_schedule):
+def test_empty_schedule_empty_flows_and_idle_steps(testbed_llm_schedule):
     comp, flows, schedule = testbed_llm_schedule
     with pytest.raises(ValueError, match="at least one step"):
         simulate_timeline(comp, flows, [], [0])
-    # a step whose channels carry no flows is dropped from the weighting
-    padded = list(schedule) + [TimelineStep("idle", (99,), weight=5.0)]
-    tl = simulate_timeline(comp, flows, padded, [0, 1])
-    assert tl.num_steps == len(schedule)
-    np.testing.assert_allclose(tl.weights, 1.0 / len(schedule))
-    with pytest.raises(ValueError, match="empty flow set"):
+    # a step whose channels no flow carries raises — unknown ids and
+    # legitimately-empty collectives alike — naming the registered CH_*
+    # vocabulary instead of silently simulating an idle step
+    padded = list(schedule) + [TimelineStep("idle", (99,), duration=5.0)]
+    with pytest.raises(ValueError, match=r"99.*known channels"):
+        simulate_timeline(comp, flows, padded, [0, 1])
+    with pytest.raises(ValueError, match="CH_GRAD_AR"):
+        partition_flows(flows, padded)
+    with pytest.raises(ValueError, match="empty"):
         simulate_timeline(comp, [], schedule, [0])
 
 
