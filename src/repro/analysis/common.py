@@ -1,0 +1,166 @@
+"""Shared plumbing for the flowcheck rules: findings, parsed sources,
+pragma comments, and the analysis context handed to every rule.
+
+Rules address files by repo-relative path through a ``Context`` so the
+same rule code runs unchanged against the real tree and against the
+miniature fixture trees the tests build under ``tmp_path``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+#: Trailing-comment pragma marker.  Recognized directives:
+#:   ``# flowcheck: disable=FT-RULE-ID[,FT-OTHER]`` — suppress those rules
+#:     on this physical line;
+#:   ``# flowcheck: disable`` — suppress every rule on this line;
+#:   ``# flowcheck: new-bench-row`` — declare an emitted bench row as
+#:     intentionally absent from the committed smoke baseline.
+PRAGMA_MARKER = "flowcheck:"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.  ``message`` is deliberately line-free and
+    names the construct it anchors to, so the fingerprint survives
+    unrelated edits that shift line numbers."""
+
+    rule: str      # e.g. "FT-JIT-BRANCH"
+    file: str      # repo-relative posix path
+    line: int
+    message: str
+    hint: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}::{self.file}::{self.message}"
+
+    def format(self) -> str:
+        out = f"{self.file}:{self.line}: {self.rule}: {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule, "file": self.file, "line": self.line,
+            "message": self.message, "hint": self.hint,
+            "fingerprint": self.fingerprint,
+        }
+
+
+class SourceFile:
+    """One parsed source file: text, lines, AST, and pragma lookups."""
+
+    def __init__(self, path: Path, root: Path):
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+
+    def pragmas(self, lineno: int) -> set[str]:
+        """Directive tokens of the ``# flowcheck:`` pragma on a physical
+        line (empty set when there is none).  ``disable=A,B`` expands to
+        ``{"disable", "disable=A", "disable=B"}`` so callers can test
+        either the bare or the rule-qualified form."""
+        if not 1 <= lineno <= len(self.lines):
+            return set()
+        text = self.lines[lineno - 1]
+        marker = text.find("#")
+        if marker < 0:
+            return set()
+        comment = text[marker:]
+        idx = comment.find(PRAGMA_MARKER)
+        if idx < 0:
+            return set()
+        out: set[str] = set()
+        for token in comment[idx + len(PRAGMA_MARKER):].split():
+            token = token.strip().rstrip(";,")
+            if not token:
+                continue
+            if token.startswith("disable="):
+                out.add("disable")
+                for rule in token[len("disable="):].split(","):
+                    if rule:
+                        out.add(f"disable={rule}")
+            else:
+                out.add(token)
+        return out
+
+    def disabled(self, lineno: int, rule: str) -> bool:
+        prag = self.pragmas(lineno)
+        if not prag:
+            return False
+        if f"disable={rule}" in prag:
+            return True
+        # a bare `disable` (no rule list) silences everything
+        return "disable" in prag and not any(
+            p.startswith("disable=") for p in prag)
+
+
+@dataclasses.dataclass
+class Context:
+    """Analysis context: the repo root plus a parsed-source cache.
+
+    Rules resolve all files through ``source``/``sources`` so tests can
+    point a Context at a miniature tree with the same relative layout.
+    """
+
+    root: Path
+    _cache: dict[str, SourceFile | None] = dataclasses.field(
+        default_factory=dict)
+
+    def source(self, rel: str) -> SourceFile | None:
+        """Parsed source for a repo-relative path; None when absent."""
+        if rel not in self._cache:
+            path = self.root / rel
+            self._cache[rel] = (
+                SourceFile(path, self.root) if path.is_file() else None)
+        return self._cache[rel]
+
+    def sources(self, rel_dir: str, pattern: str = "*.py") -> list[SourceFile]:
+        """Parsed sources for every matching file under a directory,
+        sorted by path for deterministic finding order."""
+        base = self.root / rel_dir
+        if not base.is_dir():
+            return []
+        out = []
+        for path in sorted(base.rglob(pattern)):
+            sf = self.source(path.relative_to(self.root).as_posix())
+            if sf is not None:
+                out.append(sf)
+        return out
+
+
+def call_name(node: ast.Call) -> str:
+    """Dotted name of a call's callee, best effort: ``np.arange(...)``
+    -> ``"np.arange"``, ``emit(...)`` -> ``"emit"``, anything fancier
+    -> ``""``."""
+    parts: list[str] = []
+    cur = node.func
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def keyword_names(node: ast.Call) -> set[str]:
+    return {kw.arg for kw in node.keywords if kw.arg is not None}
+
+
+def iter_parented(tree: ast.AST):
+    """Yield ``(node, parents)`` for every node, where ``parents`` is the
+    tuple of enclosing AST nodes outermost-first."""
+    stack: list[tuple[ast.AST, tuple[ast.AST, ...]]] = [(tree, ())]
+    while stack:
+        node, parents = stack.pop()
+        yield node, parents
+        child_parents = parents + (node,)
+        for child in ast.iter_child_nodes(node):
+            stack.append((child, child_parents))

@@ -1,0 +1,202 @@
+"""flowcheck driver: run every rule family, diff against the committed
+baseline, and fail on *new* findings.
+
+    PYTHONPATH=src python -m repro.analysis.flowcheck
+    PYTHONPATH=src python -m repro.analysis.flowcheck --json out.json
+    PYTHONPATH=src python -m repro.analysis.flowcheck --write-baseline
+
+Baseline contract (``flowcheck_baseline.json`` at the repo root): every
+entry suppresses findings matching its fingerprint and MUST carry a
+non-empty ``justification`` — a suppression nobody can defend is a bug
+with a paper trail.  ``--write-baseline`` seeds entries with a TODO
+justification; the check mode refuses to accept them until the TODO is
+replaced, so "baseline it" is never a silent escape hatch.  Baseline
+entries that no longer match anything are reported as STALE (advisory,
+mirroring the bench guard's ORPHANED rows) so the file shrinks as debt
+is paid down.
+
+Exit codes: 0 = clean against baseline; 1 = new findings; 2 = broken
+baseline (unjustified entries) or usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .common import Context, Finding
+from .rules import ALL_RULE_IDS, FAMILIES
+
+BASELINE_NAME = "flowcheck_baseline.json"
+TODO_JUSTIFICATION = ("TODO: explain why this pre-existing finding is "
+                      "acceptable")
+
+
+def default_root() -> Path:
+    """The repo root this package sits in (…/src/repro/analysis ->
+    three levels up)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def collect_findings(ctx: Context) -> list[Finding]:
+    """All findings from every rule family, pragma-suppressed lines
+    removed, in (file, line, rule) order."""
+    findings: list[Finding] = []
+    for _family, mod in FAMILIES:
+        findings.extend(mod.run(ctx))
+    kept = []
+    for f in findings:
+        sf = ctx.source(f.file)
+        if sf is not None and sf.disabled(f.line, f.rule):
+            continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.file, f.line, f.rule, f.message))
+    return kept
+
+
+def load_baseline(path: Path) -> tuple[list[dict], list[str]]:
+    """(entries, errors).  Errors are fatal (exit 2): a baseline that
+    cannot be trusted must not silently suppress anything."""
+    if not path.is_file():
+        return [], []
+    try:
+        payload = json.loads(path.read_text())
+    except ValueError as exc:
+        return [], [f"{path}: not valid JSON ({exc})"]
+    entries = payload.get("entries", [])
+    errors = []
+    for i, entry in enumerate(entries):
+        just = str(entry.get("justification", "")).strip()
+        if not just or just.startswith("TODO"):
+            errors.append(
+                f"{path}: entry {i} ({entry.get('fingerprint', '?')!r}) "
+                f"has no real justification — every suppression must "
+                f"say why it is acceptable")
+        if not entry.get("fingerprint"):
+            errors.append(f"{path}: entry {i} has no fingerprint")
+    return entries, errors
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    entries = [{
+        "rule": f.rule,
+        "file": f.file,
+        "message": f.message,
+        "fingerprint": f.fingerprint,
+        "justification": TODO_JUSTIFICATION,
+    } for f in findings]
+    # one entry per fingerprint (identical constructs on several lines
+    # of one function share a message by design)
+    seen: set[str] = set()
+    unique = []
+    for e in entries:
+        if e["fingerprint"] not in seen:
+            seen.add(e["fingerprint"])
+            unique.append(e)
+    payload = {
+        "schema": 1,
+        "tool": "repro.analysis.flowcheck",
+        "entries": unique,
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def split_findings(
+    findings: list[Finding], entries: list[dict],
+) -> tuple[list[Finding], list[Finding], list[dict]]:
+    """(new, suppressed, stale baseline entries)."""
+    suppressed_fps = {e["fingerprint"] for e in entries if "fingerprint" in e}
+    new = [f for f in findings if f.fingerprint not in suppressed_fps]
+    suppressed = [f for f in findings if f.fingerprint in suppressed_fps]
+    live = {f.fingerprint for f in findings}
+    stale = [e for e in entries if e.get("fingerprint") not in live]
+    return new, suppressed, stale
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.flowcheck", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("--root", type=Path, default=None,
+                        help="repo root (default: auto-detected)")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help=f"baseline path (default: <root>/"
+                             f"{BASELINE_NAME})")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline: report every finding "
+                             "as new")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write the current findings as the baseline "
+                             "(justifications seeded as TODO — fill them "
+                             "in before committing) and exit 0")
+    parser.add_argument("--json", type=Path, default=None, metavar="PATH",
+                        help="also write a machine-readable findings "
+                             "payload")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print every rule id and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for family, mod in FAMILIES:
+            for rid in mod.RULE_IDS:
+                print(f"{rid}  [{family}]")
+        return 0
+
+    root = (args.root or default_root()).resolve()
+    if not (root / "src" / "repro").is_dir():
+        print(f"flowcheck: {root} does not look like the repo root "
+              f"(no src/repro) — pass --root", file=sys.stderr)
+        return 2
+    baseline_path = args.baseline or root / BASELINE_NAME
+
+    ctx = Context(root=root)
+    findings = collect_findings(ctx)
+
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"flowcheck: wrote {len(findings)} finding(s) to "
+              f"{baseline_path}")
+        print("flowcheck: fill in every TODO justification before "
+              "committing — the check mode rejects TODOs")
+        return 0
+
+    entries: list[dict] = []
+    if not args.no_baseline:
+        entries, errors = load_baseline(baseline_path)
+        if errors:
+            for e in errors:
+                print(f"flowcheck: BROKEN BASELINE: {e}")
+            return 2
+
+    new, suppressed, stale = split_findings(findings, entries)
+
+    if args.json:
+        args.json.write_text(json.dumps({
+            "schema": 1,
+            "rules": list(ALL_RULE_IDS),
+            "findings": [f.to_json() for f in findings],
+            "new": [f.to_json() for f in new],
+            "suppressed": len(suppressed),
+            "stale_baseline": [e.get("fingerprint") for e in stale],
+        }, indent=2) + "\n")
+
+    for entry in stale:
+        print(f"flowcheck: STALE baseline entry (no longer matches "
+              f"anything — delete it): {entry.get('fingerprint')}")
+    if new:
+        print(f"flowcheck: {len(new)} new finding(s) "
+              f"({len(suppressed)} suppressed by baseline):")
+        for f in new:
+            print(f.format())
+        return 1
+    print(f"flowcheck: OK — 0 new findings "
+          f"({len(findings)} total, {len(suppressed)} suppressed by "
+          f"baseline, {len(stale)} stale baseline entr"
+          f"{'y' if len(stale) == 1 else 'ies'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,215 @@
+"""FT-API: SimSpec <-> front-end <-> fused-delegation consistency.
+
+``SimSpec`` is the one validated description of how a simulation runs,
+and four front ends accept it (``simulate_paths``, ``monte_carlo_fim``,
+``monte_carlo_throughput``, ``simulate_timeline``) alongside a
+legacy-kwarg surface.  A new SimSpec field can silently rot in three
+places, and each is a rule here:
+
+* **FT-API-KWARGS** — a front end declares an ``_UNSET`` legacy kwarg
+  that is not a SimSpec field (it would be rejected by the SimSpec
+  constructor only at call time), or declares one and then fails to
+  forward it into the dict handed to ``resolve_spec`` (the kwarg parses
+  but does nothing);
+* **FT-API-MISSING** — a SimSpec field that a front end neither exposes
+  as a legacy kwarg nor appears in the per-front-end exclusion table
+  below.  Exclusions are *declared with a reason*, so "this front end
+  deliberately has no ``transport=``" is auditable rather than
+  accidental.  A stale exclusion (the kwarg exists after all) is also
+  flagged;
+* **FT-API-FUSED** — a front end delegates to a ``fused_*`` device
+  pipeline but does not forward a SimSpec-named parameter the fused
+  function accepts.  This is exactly how ``spec.max_hops`` was silently
+  dropped by the jax fast paths before this analyzer existed: the spec
+  resolved it, the numpy path honored it, and the fused call rebuilt
+  the default.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..common import Context, Finding, call_name, keyword_names
+
+RULE_KWARGS = "FT-API-KWARGS"
+RULE_MISSING = "FT-API-MISSING"
+RULE_FUSED = "FT-API-FUSED"
+RULE_IDS = (RULE_KWARGS, RULE_MISSING, RULE_FUSED)
+
+SPEC_MODULE = "src/repro/core/vector_sim.py"
+SPEC_CLASS = "SimSpec"
+UNSET_NAME = "_UNSET"
+RESOLVE_FN = "resolve_spec"
+FUSED_MODULE = "src/repro/core/jax_engine.py"
+
+#: front-end function -> (module, {excluded spec field: reason}).
+#: An exclusion documents a *deliberate* hole in the legacy-kwarg
+#: surface; spec= still carries the field everywhere.
+FRONTENDS: dict[str, tuple[str, dict[str, str]]] = {
+    "simulate_paths": ("src/repro/core/vector_sim.py", {
+        "transport": "paths-only front end: no throughput stage ever "
+                     "reads the transport profile",
+        "timing": "snapshot front end: the time axis only exists in "
+                  "simulate_timeline",
+    }),
+    "monte_carlo_fim": ("src/repro/core/vector_sim.py", {
+        "transport": "FIM has no goodput stage, so a transport profile "
+                     "cannot change the result",
+        "timing": "snapshot front end: the time axis only exists in "
+                  "simulate_timeline",
+    }),
+    "monte_carlo_throughput": ("src/repro/core/vector_throughput.py", {
+        "timing": "snapshot front end: the time axis only exists in "
+                  "simulate_timeline",
+    }),
+    "simulate_timeline": ("src/repro/core/timeline.py", {}),
+}
+
+
+def _find_function(tree: ast.Module, name: str) -> ast.FunctionDef | None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def spec_fields(ctx: Context) -> tuple[list[str], str] | None:
+    """(SimSpec field names, module path) or None when unparseable."""
+    sf = ctx.source(SPEC_MODULE)
+    if sf is None:
+        return None
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef) and node.name == SPEC_CLASS:
+            fields = [
+                stmt.target.id for stmt in node.body
+                if isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)]
+            return fields, sf.rel
+    return None
+
+
+def _unset_params(fn: ast.FunctionDef) -> dict[str, int]:
+    """Parameter name -> line for every param defaulted to ``_UNSET``."""
+    out: dict[str, int] = {}
+    a = fn.args
+    pos = [*a.posonlyargs, *a.args]
+    for param, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        if isinstance(default, ast.Name) and default.id == UNSET_NAME:
+            out[param.arg] = param.lineno
+    for param, default in zip(a.kwonlyargs, a.kw_defaults):
+        if isinstance(default, ast.Name) and default.id == UNSET_NAME:
+            out[param.arg] = param.lineno
+    return out
+
+
+def _resolve_spec_keys(fn: ast.FunctionDef) -> set[str]:
+    """Keys of the dict literal handed to ``resolve_spec`` in the body."""
+    keys: set[str] = set()
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Call)
+                and call_name(node).split(".")[-1] == RESOLVE_FN):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Call) \
+                    and call_name(arg) == "dict":
+                keys |= {kw.arg for kw in arg.keywords if kw.arg}
+            elif isinstance(arg, ast.Dict):
+                keys |= {k.value for k in arg.keys
+                         if isinstance(k, ast.Constant)
+                         and isinstance(k.value, str)}
+    return keys
+
+
+def _fused_signatures(ctx: Context) -> dict[str, set[str]]:
+    """fused function name -> parameter names (from the fused module)."""
+    sf = ctx.source(FUSED_MODULE)
+    if sf is None:
+        return {}
+    out: dict[str, set[str]] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef) \
+                and node.name.startswith("fused_"):
+            a = node.args
+            out[node.name] = {p.arg for p in
+                              (*a.posonlyargs, *a.args, *a.kwonlyargs)}
+    return out
+
+
+def run(ctx: Context) -> list[Finding]:
+    spec = spec_fields(ctx)
+    if spec is None:
+        return []
+    fields, spec_rel = spec
+    field_set = set(fields)
+    fused_sigs = _fused_signatures(ctx)
+    findings: list[Finding] = []
+
+    for fn_name, (rel, exclusions) in FRONTENDS.items():
+        sf = ctx.source(rel)
+        if sf is None:
+            continue
+        fn = _find_function(sf.tree, fn_name)
+        if fn is None:
+            continue
+        unset = _unset_params(fn)
+        dict_keys = _resolve_spec_keys(fn)
+
+        for param, line in sorted(unset.items()):
+            if param not in field_set:
+                findings.append(Finding(
+                    rule=RULE_KWARGS, file=sf.rel, line=line,
+                    message=(f"`{fn_name}` declares legacy kwarg "
+                             f"`{param}` which is not a {SPEC_CLASS} "
+                             f"field"),
+                    hint=f"add the field to {SPEC_CLASS} (with "
+                         f"resolve() validation) or drop the kwarg"))
+            elif param not in dict_keys:
+                findings.append(Finding(
+                    rule=RULE_KWARGS, file=sf.rel, line=line,
+                    message=(f"`{fn_name}` declares legacy kwarg "
+                             f"`{param}` but never forwards it to "
+                             f"{RESOLVE_FN}"),
+                    hint="add it to the dict handed to resolve_spec — "
+                         "as written the kwarg parses and does nothing"))
+
+        for field in fields:
+            if field in unset:
+                if field in exclusions:
+                    findings.append(Finding(
+                        rule=RULE_MISSING, file=sf.rel, line=fn.lineno,
+                        message=(f"stale exclusion: `{fn_name}` now "
+                                 f"accepts `{field}` but the rule table "
+                                 f"still excludes it"),
+                        hint="delete the entry from "
+                             "rules/api_surface.FRONTENDS"))
+                continue
+            if field not in exclusions:
+                findings.append(Finding(
+                    rule=RULE_MISSING, file=sf.rel, line=fn.lineno,
+                    message=(f"{SPEC_CLASS} field `{field}` is not "
+                             f"accepted as a legacy kwarg by "
+                             f"`{fn_name}`"),
+                    hint="add the kwarg (defaulted to _UNSET and "
+                         "forwarded to resolve_spec), or declare the "
+                         "exclusion with a reason in "
+                         "rules/api_surface.FRONTENDS"))
+
+        # fused delegations must forward every spec-named parameter
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = call_name(node).split(".")[-1]
+            if callee not in fused_sigs:
+                continue
+            passed = keyword_names(node)
+            for param in sorted(fused_sigs[callee] & field_set):
+                if param not in passed:
+                    findings.append(Finding(
+                        rule=RULE_FUSED, file=sf.rel, line=node.lineno,
+                        message=(f"`{fn_name}` delegates to `{callee}` "
+                                 f"without forwarding spec field "
+                                 f"`{param}` (the fused path silently "
+                                 f"uses its own default)"),
+                        hint=f"pass {param}=s.{param} in the delegation "
+                             f"call"))
+    return findings

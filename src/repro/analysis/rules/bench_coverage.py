@@ -1,0 +1,119 @@
+"""FT-BENCH: benchmark rows must stay in lockstep with the smoke baseline.
+
+``benchmarks/check_regression.py`` already guards one direction:
+baseline rows with no counterpart in fresh results surface as ORPHANED.
+This rule is the inverse, and it runs *statically* — before any bench
+executes: every row name a smoke-covered bench module can emit must
+exist in ``benchmarks/BENCH_baseline_smoke.json``, or be explicitly
+declared new with a ``# flowcheck: new-bench-row`` pragma on the
+``emit(...)`` line.  Without it, a freshly added row ships unguarded
+(no baseline row -> the regression guard never compares it) and the
+PR-4/PR-5 baseline-drift dance repeats.
+
+A module is *smoke-covered* when at least one of its emitted names
+matches a baseline row — modules outside the CI smoke set
+(``fig4``, ``placement``, ...) have no baseline rows at all and are
+skipped wholesale, so adding a brand-new bench module stays friction
+free until it joins the smoke matrix.
+
+f-string row names (``f"hetero_{scen}_{tag}_fim_pct"``) become match
+patterns (each interpolation matches any non-empty run), checked
+against the baseline with fullmatch: the pattern must cover at least
+one committed row.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+
+from ..common import Context, Finding, call_name
+
+RULE_ROW = "FT-BENCH-ROW"
+RULE_IDS = (RULE_ROW,)
+
+BENCH_DIR = "benchmarks"
+BASELINE_REL = "benchmarks/BENCH_baseline_smoke.json"
+EMIT_NAME = "emit"
+NEW_ROW_PRAGMA = "new-bench-row"
+
+#: Harness/guard modules that never emit rows of their own.
+SKIP_FILES = {"run.py", "common.py", "check_regression.py",
+              "render_roofline_md.py"}
+
+
+def _emit_patterns(tree: ast.Module) -> list[tuple[str, int, bool]]:
+    """(regex-or-literal, line, is_pattern) for every emit() call whose
+    first argument is a string literal or f-string.  Dynamically
+    computed names (a variable) cannot be checked and are skipped."""
+    out: list[tuple[str, int, bool]] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and call_name(node).split(".")[-1] == EMIT_NAME
+                and node.args):
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            out.append((arg.value, node.lineno, False))
+        elif isinstance(arg, ast.JoinedStr):
+            parts = []
+            for v in arg.values:
+                if isinstance(v, ast.Constant):
+                    parts.append(re.escape(str(v.value)))
+                else:
+                    parts.append(r".+")
+            out.append(("".join(parts), node.lineno, True))
+    return out
+
+
+def baseline_row_names(ctx: Context) -> set[str] | None:
+    path = ctx.root / BASELINE_REL
+    if not path.is_file():
+        return None
+    try:
+        payload = json.loads(path.read_text())
+    except ValueError:
+        return None
+    return {row.get("name") for row in payload.get("rows", [])
+            if row.get("name")}
+
+
+def run(ctx: Context) -> list[Finding]:
+    rows = baseline_row_names(ctx)
+    if rows is None:
+        return []
+    findings: list[Finding] = []
+    for sf in ctx.sources(BENCH_DIR):
+        if sf.path.name in SKIP_FILES:
+            continue
+        emits = _emit_patterns(sf.tree)
+        if not emits:
+            continue
+
+        def covered(spec: str, is_pattern: bool) -> bool:
+            if is_pattern:
+                rx = re.compile(spec)
+                return any(rx.fullmatch(r) for r in rows)
+            return spec in rows
+
+        # modules with zero baseline presence are not in the CI smoke
+        # set; their rows are unguarded by design
+        if not any(covered(spec, isp) for spec, _, isp in emits):
+            continue
+        for spec, line, is_pattern in emits:
+            if covered(spec, is_pattern):
+                continue
+            if NEW_ROW_PRAGMA in sf.pragmas(line):
+                continue
+            kind = "pattern" if is_pattern else "row"
+            findings.append(Finding(
+                rule=RULE_ROW, file=sf.rel, line=line,
+                message=(f"bench {kind} `{spec}` has no matching row in "
+                         f"{BASELINE_REL} — the regression guard will "
+                         f"never compare it"),
+                hint="refresh the smoke baseline (recipe in ROADMAP.md "
+                     "housekeeping), or mark the emit line with "
+                     "`# flowcheck: new-bench-row` until the next "
+                     "refresh"))
+    return findings

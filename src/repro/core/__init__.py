@@ -23,6 +23,7 @@ from .ecmp import (
     FIELDS_5TUPLE, FIELDS_VXLAN, FIELDS_IP_PAIR,
 )
 from .compile_fabric import CompiledFabric, compile_fabric
+from .contracts import CONTRACTS_ENV, ContractViolation, contracts_enabled
 from .vector_sim import (
     VectorTraceResult, MonteCarloFim, SimSpec, simulate_paths,
     fim_from_counts, fim_vector, monte_carlo_fim, resolve_flows,
@@ -89,6 +90,7 @@ __all__ = [
     "device_seed", "flow_hash_fields", "flow_fields_matrix",
     "FIELDS_5TUPLE", "FIELDS_VXLAN", "FIELDS_IP_PAIR",
     "CompiledFabric", "compile_fabric",
+    "CONTRACTS_ENV", "ContractViolation", "contracts_enabled",
     "VectorTraceResult", "MonteCarloFim", "SimSpec", "simulate_paths",
     "fim_from_counts", "fim_vector", "monte_carlo_fim", "resolve_flows",
     "DEMAND_UNIFORM", "DEMAND_BYTES", "flow_demand_weights",

@@ -1,0 +1,140 @@
+"""Opt-in runtime contract checks for the simulation seams.
+
+``FLOWTRACER_CONTRACTS=1`` arms cheap shape/dtype/finiteness assertions
+at the three places every simulation flows through — ``resolve_spec``
+(the front-end glue), ``simulate_paths`` (the routed tensor), and
+``throughput_from_result`` (the rate aggregation).  They are the
+*runtime* half of the flowcheck story (``repro.analysis``): the static
+analyzer proves the call sites stay consistent; contract mode proves
+the arrays that actually crossed the seam look like the docstrings say.
+
+Off by default and read from the environment on every call, so a test
+can flip it with ``monkeypatch.setenv`` — no import-order trap.  The
+checks are linear scans of already-materialized arrays (no copies, no
+device syncs beyond what a consumer would force anyway), sized to run a
+full tier-1 shard without noticeable cost.
+
+Violations raise ``ContractViolation`` (an ``AssertionError`` subclass,
+so ``pytest.raises(AssertionError)`` also matches) naming the seam and
+the invariant.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+CONTRACTS_ENV = "FLOWTRACER_CONTRACTS"
+
+_OFF = ("", "0", "false", "off", "no")
+
+
+class ContractViolation(AssertionError):
+    """A runtime contract at a simulation seam did not hold."""
+
+
+def contracts_enabled() -> bool:
+    """True when ``FLOWTRACER_CONTRACTS`` is set to anything truthy."""
+    return os.environ.get(CONTRACTS_ENV, "").strip().lower() not in _OFF
+
+
+def _fail(seam: str, invariant: str) -> None:
+    raise ContractViolation(f"[{CONTRACTS_ENV}] {seam}: {invariant}")
+
+
+def check_spec(s) -> None:
+    """Post-conditions of ``resolve_spec``: the spec is *resolved* —
+    every engine-coupled default concretized, scalars validated."""
+    seam = "resolve_spec"
+    if not (isinstance(s.max_hops, int) and s.max_hops >= 1):
+        _fail(seam, f"resolved max_hops must be an int >= 1, "
+                    f"got {s.max_hops!r}")
+    if s.hash_backend is None:
+        _fail(seam, "resolved spec left hash_backend unset (resolve() "
+                    "must concretize the engine-coupled default)")
+    if s.fields is None:
+        _fail(seam, "resolved spec left fields unset")
+    if isinstance(s.strategy, str):
+        _fail(seam, f"resolved spec left strategy as the name string "
+                    f"{s.strategy!r} (resolve() must look it up)")
+    if isinstance(s.transport, str) and s.transport != "ideal":
+        _fail(seam, f"resolved spec left transport as the name string "
+                    f"{s.transport!r}")
+
+
+def check_trace_result(res) -> None:
+    """Post-conditions of ``simulate_paths``: the routed tensor is a
+    well-formed ``VectorTraceResult`` (shapes agree, link ids in range,
+    flowlet demands positive and summing to 1 per parent flow)."""
+    seam = "simulate_paths"
+    ids = res.link_ids
+    if ids.ndim != 3:
+        _fail(seam, f"link_ids must be (H, Nf, S), got shape {ids.shape}")
+    if not np.issubdtype(ids.dtype, np.integer):
+        _fail(seam, f"link_ids must be an integer tensor, got {ids.dtype}")
+    num_links = res.compiled.num_links
+    lo, hi = int(ids.min()), int(ids.max())
+    if lo < -1 or hi >= num_links:
+        _fail(seam, f"link ids must lie in [-1, {num_links}), "
+                    f"got range [{lo}, {hi}]")
+    _h, nf, s_dim = ids.shape
+    if res.seeds.shape != (s_dim,):
+        _fail(seam, f"seeds shape {res.seeds.shape} does not match the "
+                    f"link_ids seed axis ({s_dim})")
+    n = res.num_flows
+    fi = res.flow_index
+    if fi.shape != (nf,):
+        _fail(seam, f"flow_index shape {fi.shape} does not match the "
+                    f"flowlet axis ({nf})")
+    if nf and (fi.min() < 0 or fi.max() >= n):
+        _fail(seam, f"flow_index must name parent rows in [0, {n}), "
+                    f"got range [{fi.min()}, {fi.max()}]")
+    dem = res.demand
+    if dem.shape != (nf,):
+        _fail(seam, f"demand shape {dem.shape} does not match the "
+                    f"flowlet axis ({nf})")
+    if not (np.isfinite(dem).all() and (dem > 0).all()):
+        _fail(seam, "flowlet demand fractions must be finite and > 0")
+    per_flow = np.zeros(n)
+    np.add.at(per_flow, fi, dem)
+    if not np.allclose(per_flow, 1.0):
+        _fail(seam, "flowlet demand fractions must sum to 1 per parent "
+                    f"flow (worst deviation {abs(per_flow - 1).max():.3g})")
+    fd = res.flow_demand
+    if fd.shape != (n,):
+        _fail(seam, f"flow_demand shape {fd.shape} must be ({n},)")
+    if not (np.isfinite(fd).all() and (fd >= 0).all()):
+        _fail(seam, "flow_demand weights must be finite and >= 0")
+    if res.extra_exposure is not None:
+        ex = res.extra_exposure
+        if ex.shape != (n, s_dim):
+            _fail(seam, f"extra_exposure shape {ex.shape} must be "
+                        f"({n}, {s_dim})")
+        if not (np.isfinite(ex).all() and (ex >= 0).all()):
+            _fail(seam, "extra_exposure must be finite and >= 0")
+
+
+def check_throughput(tp) -> None:
+    """Post-conditions of ``throughput_from_result``: finite non-negative
+    rates, efficiency in (0, 1], and goodput = rates x efficiency."""
+    seam = "throughput_from_result"
+    n, s_dim = len(tp.flows), len(tp.seeds)
+    if tp.rates.shape != (n, s_dim):
+        _fail(seam, f"rates shape {tp.rates.shape} must be "
+                    f"({n}, {s_dim})")
+    if not (np.isfinite(tp.rates).all() and (tp.rates >= 0).all()):
+        _fail(seam, "rates must be finite and >= 0")
+    if len(tp.pairs) != tp.per_pair.shape[0] \
+            or tp.per_pair.shape[1] != s_dim:
+        _fail(seam, f"per_pair shape {tp.per_pair.shape} must be "
+                    f"({len(tp.pairs)}, {s_dim})")
+    if not np.isfinite(tp.per_pair).all():
+        _fail(seam, "per-pair rates must be finite")
+    eff = tp.efficiency
+    if not ((eff > 0) & (eff <= 1.0)).all():
+        _fail(seam, "efficiency must lie in (0, 1]")
+    if not (np.isfinite(tp.exposure).all() and (tp.exposure >= 0).all()):
+        _fail(seam, "exposure must be finite and >= 0")
+    if not np.allclose(tp.goodput, tp.rates * eff):
+        _fail(seam, "goodput must equal rates x efficiency")

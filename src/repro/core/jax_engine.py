@@ -709,7 +709,7 @@ def jax_flowlet_exposure(
     extra = result.extra_exposure
     fi = np.asarray(result.flow_index)
     if not result.is_multipath and fi.size == n and (
-            fi == np.arange(n)).all():
+            fi == np.arange(n, dtype=np.int64)).all():
         base = np.zeros((n, s))
         return base if extra is None else base + extra
     if flowlet_rates is None:

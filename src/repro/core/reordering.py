@@ -138,8 +138,8 @@ def calibrate_transport(
                 f"got {x}")
         if not 0.0 < y < 1.0:
             raise ValueError(f"anchor efficiency must be in (0, 1), got {y}")
-    x = np.array([p[0] for p in pts])
-    y = np.array([p[1] for p in pts])
+    x = np.array([p[0] for p in pts], dtype=np.float64)
+    y = np.array([p[1] for p in pts], dtype=np.float64)
     alphas = np.exp(np.linspace(np.log(1e-3), np.log(50.0), grid))
     g = np.expm1(-alphas[:, None] * x[None, :])        # (grid, P)
     # least squares for u = 1 - floor in  (y - 1) = u * g,  clipped to
@@ -262,7 +262,7 @@ def flowlet_exposure(
     extra = result.extra_exposure
     fi = np.asarray(result.flow_index)
     if not result.is_multipath and fi.size == n and (
-            fi == np.arange(n)).all():
+            fi == np.arange(n, dtype=np.int64)).all():
         base = np.zeros((n, s))            # single-path: no reordering
         return base if extra is None else base + extra
 

@@ -234,11 +234,11 @@ class PrimeSpraying(RoutingStrategy):
                     f"flowlet {int(local[cols[int(j)]])}"))
 
         if sprayed.all():
-            link_ids = walk(np.arange(total), with_labels=True)
+            link_ids = walk(np.arange(total, dtype=np.int64), with_labels=True)
         elif not sprayed.any():
             # nothing crosses the elephant bar (or flowlets=1): one
             # label-free walk, bit-identical to EcmpStrategy
-            link_ids = walk(np.arange(total), with_labels=False)
+            link_ids = walk(np.arange(total, dtype=np.int64), with_labels=False)
         else:
             # mixed: sprayed columns walk with entropy labels, unsprayed
             # flows walk label-free (each stays on its exact ECMP path),
@@ -494,10 +494,10 @@ def _sequential_congestion_place(
     src_dev, dst_dev, src_key, dst_key = endpoints
     s = len(seeds_u64)
     load_flat = load.reshape(-1)           # writable view for scatters
-    rows = np.arange(s)
+    rows = np.arange(s, dtype=np.int64)
     row_off = rows * comp.num_links
     cand_w = comp.cand.shape[-1]
-    col_idx = np.arange(cand_w)[None, :]
+    col_idx = np.arange(cand_w, dtype=np.int64)[None, :]
     hops = 0
     for j in order:
         m = None if mask is None else mask[j]
@@ -700,7 +700,7 @@ def _wave_walk_numpy(comp, src_dev, dst_dev, src_key, dst_key, field_mat,
     flat = np.floor(loads.reshape(-1) / quantum)
     row_off = np.arange(S, dtype=np.int64) * comp.num_links
     cand_w = comp.cand.shape[-1]
-    col_idx = np.arange(cand_w)
+    col_idx = np.arange(cand_w, dtype=np.int64)
     hops = 0
     for t in range(max_hops):
         if done.all():
@@ -768,7 +768,8 @@ def _wave_conflicts(comp, ids, src_dev, src_key, dst_key,
     flatq = np.floor(spec_loads.reshape(-1) / quantum)
     row_off = np.arange(S, dtype=np.int64) * comp.num_links
     V, K, C = comp.cand.shape
-    valid_vk = (np.arange(C) < comp.cand_n[..., None]) & (comp.cand >= 0)
+    valid_vk = (np.arange(C, dtype=np.int64) < comp.cand_n[..., None]) \
+        & (comp.cand >= 0)
     clq = flatq[np.maximum(comp.cand, 0)[..., None] + row_off]  # (V,K,C,S)
     n_valid = np.maximum(valid_vk.sum(axis=-1), 1)              # (V,K)
     mu = (np.where(valid_vk[..., None], clq, 0.0).sum(axis=2)
@@ -776,7 +777,7 @@ def _wave_conflicts(comp, ids, src_dev, src_key, dst_key,
     state = np.broadcast_to(src_dev[:, None], (na, S)).copy()
     conflict = np.zeros((na, S), bool)
     rate = np.zeros((na, S))
-    cols = np.arange(S)
+    cols = np.arange(S, dtype=np.int64)
     for t in range(n_hops):
         chosen = ids[t]                                # (N, S)
         walked = chosen >= 0
@@ -1026,9 +1027,9 @@ class WaveCongestionAware(CongestionAware):
         endpoints = comp.flow_endpoint_ids(flows)
         order = np.argsort(-flow_demand, kind="stable")  # same as sequential
         o_rank = np.empty(n, np.int64)
-        o_rank[order] = np.arange(n)
+        o_rank[order] = np.arange(n, dtype=np.int64)
         row_off = np.arange(s, dtype=np.int64) * comp.num_links
-        cols = np.arange(s)
+        cols = np.arange(s, dtype=np.int64)
         # round 0: the whole wave walks the empty fabric — every
         # candidate ties at zero, so the wave decision rule degenerates
         # to plain ECMP and the round IS the (engine-dispatched)

@@ -464,6 +464,7 @@ def simulate_timeline(
     only_used_leaves: bool = False,
     engine=_UNSET,
     timing=_UNSET,
+    max_hops=_UNSET,
 ) -> TimelineResult:
     """Simulate a phase schedule step by step over one compiled fabric.
 
@@ -501,7 +502,7 @@ def simulate_timeline(
     s = resolve_spec(spec, dict(
         fields=fields, hash_backend=hash_backend, strategy=strategy,
         demand_mode=demand_mode, transport=transport, engine=engine,
-        timing=timing))
+        timing=timing, max_hops=max_hops))
     comp = (fabric if isinstance(fabric, CompiledFabric)
             else compile_fabric(fabric))
     flows = resolve_flows(comp, workload)

@@ -36,6 +36,7 @@ from collections.abc import Sequence
 import numpy as np
 
 from .compile_fabric import CompiledFabric, compile_fabric
+from .contracts import check_spec, check_trace_result, contracts_enabled
 from .ecmp import (
     FIELDS_5TUPLE, FIELDS_IP_PAIR, FIELDS_VXLAN, HASH_INIT,
     flow_fields_matrix,
@@ -241,8 +242,12 @@ def resolve_spec(spec: SimSpec | None, kwargs: dict) -> SimSpec:
         if not isinstance(spec, SimSpec):
             raise TypeError(
                 f"spec must be a SimSpec, got {type(spec).__name__}")
-        return spec.resolve()
-    return SimSpec(**passed).resolve()
+        s = spec.resolve()
+    else:
+        s = SimSpec(**passed).resolve()
+    if contracts_enabled():
+        check_spec(s)
+    return s
 
 
 _M1 = np.uint64(0xBF58476D1CE4E5B9)
@@ -582,10 +587,13 @@ def simulate_paths(
                  else {"demand_mode": s.demand_mode})
         if s.engine != ENGINE_NUMPY:
             extra["engine"] = s.engine
-        return s.strategy.route(
+        res = s.strategy.route(
             comp, flows, seeds_u64, fields=s.fields,
             hash_backend=s.hash_backend, max_hops=s.max_hops,
             field_matrix=field_matrix, **extra)
+        if contracts_enabled():
+            check_trace_result(res)
+        return res
     flow_demand = flow_demand_weights(flows, s.demand_mode)
     field_mat = (field_matrix if field_matrix is not None
                  else flow_fields_matrix(flows, s.fields))  # (N, F) uint64
@@ -594,9 +602,12 @@ def simulate_paths(
         comp, src_dev, dst_dev, src_key, dst_key, field_mat, seeds_u64,
         hash_backend=s.hash_backend, max_hops=s.max_hops,
         describe=lambda n: f"flow {flows[n].flow_id}", engine=s.engine)
-    return VectorTraceResult(
+    res = VectorTraceResult(
         compiled=comp, flows=flows, seeds=seeds_u64, link_ids=link_ids,
         flow_demand=flow_demand)
+    if contracts_enabled():
+        check_trace_result(res)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -627,7 +638,7 @@ def fim_from_counts(
         present = counts > 0                       # (S, L)
         used = np.zeros((S, comp.num_devices), bool)
         rows = np.broadcast_to(
-            np.arange(S)[:, None], present.shape)
+            np.arange(S, dtype=np.int64)[:, None], present.shape)
         np.logical_or.at(used, (rows, comp.link_src[None, :]), present)
         np.logical_or.at(used, (rows, comp.link_dst[None, :]), present)
 
@@ -716,6 +727,7 @@ def monte_carlo_fim(
     strategy=_UNSET,
     demand_mode=_UNSET,
     engine=_UNSET,
+    max_hops=_UNSET,
 ) -> MonteCarloFim:
     """FIM distribution of a routing strategy across a hash-seed sweep.
 
@@ -734,7 +746,7 @@ def monte_carlo_fim(
     """
     s = resolve_spec(spec, dict(
         fields=fields, hash_backend=hash_backend, strategy=strategy,
-        demand_mode=demand_mode, engine=engine))
+        demand_mode=demand_mode, engine=engine, max_hops=max_hops))
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     if s.engine != ENGINE_NUMPY and _is_plain_ecmp(s.strategy):
         from .jax_engine import fused_monte_carlo_fim, resolve_engine
@@ -743,7 +755,7 @@ def monte_carlo_fim(
             comp, workload, seeds, fields=s.fields,
             hash_backend=s.hash_backend,
             layers=layers, only_used_leaves=only_used_leaves,
-            demand_mode=s.demand_mode)
+            demand_mode=s.demand_mode, max_hops=s.max_hops)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, spec=s)
     agg, per_layer = fim_from_counts(

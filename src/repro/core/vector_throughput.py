@@ -43,6 +43,7 @@ from collections.abc import Sequence
 import numpy as np
 
 from .compile_fabric import CompiledFabric, compile_fabric
+from .contracts import check_throughput, contracts_enabled
 from .fabric import Fabric
 from .flows import Flow, WorkloadDescription
 from .vector_sim import (
@@ -367,7 +368,8 @@ def flow_rates_from_flowlets(result: VectorTraceResult,
     same segment reduction (``vector_sim.segment_reduce``) the exposure
     model runs, so the two can never disagree on the grouping."""
     fi = result.flow_index
-    if not result.is_multipath and (fi == np.arange(len(fi))).all():
+    if not result.is_multipath and (
+            fi == np.arange(len(fi), dtype=np.int64)).all():
         return flowlet_rates
     return np.ascontiguousarray(
         segment_reduce(flowlet_rates, fi, result.num_flows, np.add, 0.0),
@@ -661,17 +663,22 @@ def throughput_from_result(
     rates = flow_rates_from_flowlets(result, flowlet_rates)
     pairs, per_pair = pair_rate_matrix(result.flows, rates)
     if profile.alpha == 0.0 or profile.floor == 1.0:
-        return MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
-                                    rates=rates, pairs=pairs,
-                                    per_pair=per_pair,
-                                    transport=profile.name)
-    exposure = flowlet_exposure(result, flowlet_rates, engine=engine)
-    efficiency = reordering_efficiency(exposure, profile)
-    return MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
-                                rates=rates, pairs=pairs, per_pair=per_pair,
-                                transport=profile.name, exposure=exposure,
-                                efficiency=efficiency,
-                                goodput=rates * efficiency)
+        tp = MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
+                                  rates=rates, pairs=pairs,
+                                  per_pair=per_pair,
+                                  transport=profile.name)
+    else:
+        exposure = flowlet_exposure(result, flowlet_rates, engine=engine)
+        efficiency = reordering_efficiency(exposure, profile)
+        tp = MonteCarloThroughput(seeds=result.seeds, flows=result.flows,
+                                  rates=rates, pairs=pairs,
+                                  per_pair=per_pair,
+                                  transport=profile.name, exposure=exposure,
+                                  efficiency=efficiency,
+                                  goodput=rates * efficiency)
+    if contracts_enabled():
+        check_throughput(tp)
+    return tp
 
 
 def monte_carlo_throughput(
@@ -687,6 +694,7 @@ def monte_carlo_throughput(
     demand_mode=_UNSET,
     transport=_UNSET,
     engine=_UNSET,
+    max_hops=_UNSET,
 ) -> MonteCarloThroughput:
     """Max-min throughput distribution of a routing strategy across a
     seed sweep.
@@ -708,7 +716,8 @@ def monte_carlo_throughput(
     """
     s = resolve_spec(spec, dict(
         fields=fields, hash_backend=hash_backend, strategy=strategy,
-        demand_mode=demand_mode, transport=transport, engine=engine))
+        demand_mode=demand_mode, transport=transport, engine=engine,
+        max_hops=max_hops))
     comp = fabric if isinstance(fabric, CompiledFabric) else compile_fabric(fabric)
     if s.engine != ENGINE_NUMPY and _is_plain_ecmp(s.strategy):
         from .jax_engine import fused_monte_carlo_throughput, resolve_engine
@@ -717,7 +726,7 @@ def monte_carlo_throughput(
             comp, workload, seeds, fields=s.fields,
             hash_backend=s.hash_backend,
             demand_mode=s.demand_mode, transport=s.transport,
-            field_matrix=field_matrix)
+            field_matrix=field_matrix, max_hops=s.max_hops)
     flows = resolve_flows(comp, workload)
     res = simulate_paths(comp, flows, seeds, spec=s,
                          field_matrix=field_matrix)

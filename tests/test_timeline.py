@@ -14,10 +14,11 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    CH_GRAD_AR, CH_MOE_A2A, LlmJobSpec, SCHEDULE_DP_OVERLAP,
-    SCHEDULE_SEQUENTIAL, TimelineStep, build_multipod_fabric,
-    build_paper_testbed, compile_fabric, flow_channel, llm_collective_phases,
-    merged_step, monte_carlo_fim, monte_carlo_throughput, multipod_llm_schedule,
+    CH_BARRIER, CH_FSDP_AG, CH_FSDP_RS, CH_GRAD_AR, CH_MOE_A2A, LlmJobSpec,
+    SCHEDULE_DP_OVERLAP, SCHEDULE_SEQUENTIAL, TimelineStep,
+    build_multipod_fabric, build_paper_testbed, channel_name, compile_fabric,
+    flow_channel, known_channels, llm_collective_phases, merged_step,
+    monte_carlo_fim, monte_carlo_throughput, multipod_llm_schedule,
     paper_testbed_llm_schedule, partition_flows, simulate_timeline,
 )
 
@@ -153,6 +154,19 @@ def test_timeline_step_validation():
         TimelineStep("empty", ())
     with pytest.raises(ValueError, match="duration"):
         TimelineStep("bad", (1,), duration=0.0)
+
+
+def test_channel_vocabulary_fully_registered():
+    # every schedule channel resolves through the registry by name —
+    # a CH_* constant no schedule exercise would otherwise rot unseen
+    expected = {CH_GRAD_AR: "CH_GRAD_AR", CH_FSDP_AG: "CH_FSDP_AG",
+                CH_FSDP_RS: "CH_FSDP_RS", CH_MOE_A2A: "CH_MOE_A2A",
+                CH_BARRIER: "CH_BARRIER"}
+    assert len(expected) == 5          # distinct channel ids
+    known = known_channels()
+    for cid, name in expected.items():
+        assert channel_name(cid) == f"{cid} ({name})"
+        assert f"{cid} ({name})" in known
 
 
 def test_partition_rejects_stray_and_unlabeled(paper_setup_small):

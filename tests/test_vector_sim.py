@@ -293,3 +293,29 @@ def test_simspec_spans_all_front_ends(paper_compiled, paper_setup):
     tl_spec = simulate_timeline(paper_compiled, lflows, sched, seeds, spec=s)
     np.testing.assert_array_equal(tl_spec.fim, tl_legacy.fim)
     np.testing.assert_array_equal(tl_spec.goodput, tl_legacy.goodput)
+
+
+def test_max_hops_spans_all_front_ends(paper_compiled, paper_setup):
+    # regression (flowcheck FT-API-MISSING / FT-API-FUSED): max_hops was
+    # absent from the aggregate front ends' legacy-kwarg surface, and the
+    # fused jax delegations silently rebuilt the default instead of
+    # forwarding spec.max_hops
+    from repro.core import (
+        SimSpec, monte_carlo_throughput, paper_testbed_llm_schedule,
+        simulate_timeline,
+    )
+    _, wl, flows = paper_setup
+    seeds = [0, 1]
+    # testbed paths take >1 hop: an insufficient budget must fail loudly
+    with pytest.raises(RuntimeError, match="did not terminate"):
+        monte_carlo_fim(paper_compiled, flows, seeds, max_hops=1)
+    with pytest.raises(RuntimeError, match="did not terminate"):
+        monte_carlo_throughput(paper_compiled, flows, seeds, max_hops=1)
+    _, lflows, _, sched = paper_testbed_llm_schedule()
+    with pytest.raises(RuntimeError, match="did not terminate"):
+        simulate_timeline(paper_compiled, lflows, sched, seeds, max_hops=1)
+    # the fused device pipelines must honor the budget too
+    for front in (monte_carlo_fim, monte_carlo_throughput):
+        with pytest.raises(RuntimeError, match="did not terminate"):
+            front(paper_compiled, flows, seeds,
+                  spec=SimSpec(engine="jax", max_hops=1))
